@@ -1,0 +1,64 @@
+"""Per-kernel micro-bench: Pallas kernels in interpret mode (correctness
+cost) vs the pure-XLA oracle on CPU.  These are CPU wall times — interpret
+mode executes the kernel body in Python, so the XLA oracle is faster here;
+the TPU numbers are structural (roofline terms from BlockSpec tiling).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.hw import V5E
+from repro.kernels import ops, ref
+from repro.kernels.matmul import pick_block_shape
+
+
+def _t(f, *args, reps=2):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(*args).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv=True):
+    rows = []
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    # matmul
+    for n in (128, 256):
+        a = jax.random.normal(k1, (n, n), jnp.float32)
+        b = jax.random.normal(k2, (n, n), jnp.float32)
+        t_pallas = _t(lambda a, b: ops.matmul(a, b, interpret=True), a, b)
+        t_ref = _t(ref.matmul_ref, a, b)
+        bm, bn, bk = pick_block_shape(n, n, n, 4)
+        vmem = (bm * bk + bk * bn + bm * bn) * 4
+        rows.append((f"matmul_{n}", t_pallas, t_ref))
+        if csv:
+            print(f"kernel_matmul,n={n},pallas_interp={t_pallas:.0f}us,"
+                  f"xla_ref={t_ref:.0f}us,block=({bm},{bn},{bk}),"
+                  f"vmem={vmem/1e6:.1f}MB/{V5E.vmem_bytes/1e6:.0f}MB")
+    # bitonic sort
+    for n in (1024, 4096):
+        x = jax.random.normal(k1, (n,))
+        t_pallas = _t(lambda x: ops.sort(x, interpret=True), x)
+        t_ref = _t(ref.sort_ref, x)
+        rows.append((f"sort_{n}", t_pallas, t_ref))
+        if csv:
+            print(f"kernel_sort,n={n},pallas_interp={t_pallas:.0f}us,xla_ref={t_ref:.0f}us")
+    # flash attention
+    q = jax.random.normal(k1, (2, 256, 4, 64))
+    kk = jax.random.normal(k2, (2, 256, 2, 64))
+    vv = jax.random.normal(k2, (2, 256, 2, 64))
+    t_pallas = _t(lambda q, k, v: ops.flash_attention(q, k, v, interpret=True), q, kk, vv)
+    from repro.models.attention import dense_attention
+
+    t_ref = _t(lambda q, k, v: dense_attention(q, k, v, causal=True), q, kk, vv)
+    rows.append(("flash_256", t_pallas, t_ref))
+    if csv:
+        print(f"kernel_flash,s=256,pallas_interp={t_pallas:.0f}us,xla_ref={t_ref:.0f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 2: serial vs parallel matmul crossover.
+
+Reproduction: the paper measures wall time of serial vs parallel (OpenMP)
+matmul over matrix order and finds parallel pays only above order ~1000.
+Here: measured serial CPU wall time anchors the model's shape; serial and
+best-parallel TPU-v5e times come from the overhead model; the crossover
+order is the quantitative output (paper: ~1000 on multicore CPU; TPU v5e:
+higher — ICI is expensive relative to the MXU; see EXPERIMENTS.md §Paper).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OverheadModel, decide_matmul
+
+ORDERS = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
+CHIPS = (8, 64, 256)
+
+
+def _measure_cpu(n: int, reps: int = 3) -> float:
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(a).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(a).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv=True):
+    om = OverheadModel()
+    rows = []
+    for n in ORDERS:
+        cpu_s = _measure_cpu(n) if n <= 4096 else float("nan")
+        serial = om.matmul_cost(n, n, n, strategy="serial")
+        row = {"order": n, "cpu_measured_us": cpu_s * 1e6,
+               "v5e_serial_us": serial.total * 1e6}
+        for c in CHIPS:
+            rep = decide_matmul(n, n, n, chips=c)
+            row[f"v5e_{c}chips_us"] = rep.chosen.total * 1e6
+            row[f"strategy_{c}"] = rep.chosen.strategy
+        rows.append(row)
+        if csv:
+            print(f"matmul_crossover,order={n},cpu={row['cpu_measured_us']:.1f}us,"
+                  f"serial={row['v5e_serial_us']:.2f}us," +
+                  ",".join(f"{c}chips={row[f'v5e_{c}chips_us']:.2f}us/{row[f'strategy_{c}']}"
+                           for c in CHIPS))
+    for c in CHIPS:
+        xo = om.matmul_crossover_order(c)
+        print(f"matmul_crossover,chips={c},crossover_order={xo},paper_cpu_order=1000")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""§Roofline table generator: reads results/dryrun_*.json (produced by
+``python -m repro.launch.dryrun --all --out ...``) and renders the
+per-(arch x shape x mesh) markdown table for EXPERIMENTS.md."""
+
+import json
+import sys
+from pathlib import Path
+
+COLS = ("t_compute_s", "t_memory_s", "t_collective_s")
+
+
+def render(path: str) -> str:
+    recs = json.load(open(path))
+    lines = [
+        "| cell | chips | compute s | memory s | collective s | bound | "
+        "MODEL/HLO flops | frac (XLA) | frac (flash) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['cell']} | — | — | — | — | skipped | — | — | — |"
+                         f" <!-- {r['reason']} -->")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            lines.append(f"| {r['cell']} | — | — | — | — | {r['status']} | — | — | — |")
+            continue
+        t = r["roofline"]["terms"]
+        tf = r["roofline"].get("terms_flash_kernel", t)
+        lines.append(
+            f"| {r['cell']} | {t['chips']} | {t['t_compute_s']:.3e} | "
+            f"{t['t_memory_s']:.3e} | {t['t_collective_s']:.3e} | {t['bound']} | "
+            f"{t['useful_flops_fraction']:.3f} | {t['roofline_fraction']:.3f} | "
+            f"{tf['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(csv=True):
+    for p in sorted(Path("results").glob("dryrun_*.json")):
+        print(f"=== {p} ===")
+        print(render(str(p)))
+    return []
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        print(render(sys.argv[1]))
+    else:
+        run()

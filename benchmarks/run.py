@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure + framework extras.
+
+  matmul_crossover — paper Fig. 2 (serial/parallel crossover over order)
+  sort_pivots      — paper Table 3 (pivot strategies; imbalance on 8 devices)
+  wkv_chunk        — fork-join chunk sweep for the RWKV6 recurrence
+  kernels_bench    — Pallas kernels (interpret) vs XLA oracles
+  roofline_table   — renders §Roofline from results/dryrun_*.json (if present)
+
+Prints ``name,key=value,...`` CSV lines.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        kernels_bench,
+        matmul_crossover,
+        roofline_table,
+        sort_pivots,
+        wkv_chunk,
+    )
+
+    suites = {
+        "matmul_crossover": matmul_crossover.run,
+        "sort_pivots": sort_pivots.run,
+        "wkv_chunk": wkv_chunk.run,
+        "kernels_bench": kernels_bench.run,
+        "roofline_table": roofline_table.run,
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"### {name}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"### {name} done in {time.time() - t0:.1f}s\n")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

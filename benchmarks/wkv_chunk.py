@@ -1,0 +1,49 @@
+"""Scan-chunk fork-join sweep (the paper's overhead trade, applied to the
+RWKV6 sequential recurrence).
+
+Small chunks = many serial scan steps (launch overhead dominates, the
+paper's thread-creation analogue); big chunks = a large (L, L, N) pairwise
+intra-chunk tensor (memory-term dominates).  Measures CPU wall time per
+chunk size and prints the overhead model's v5e prediction + its argmin —
+validating that the model picks a sensible chunk (core/overhead.best_scan_chunk).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import OverheadModel
+from repro.models.rwkv import wkv_chunked
+
+CHUNKS = (16, 32, 64, 128, 256)
+B, S, H, N = 2, 1024, 4, 32
+
+
+def run(csv=True):
+    om = OverheadModel()
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 2.0)
+    u = jnp.zeros((H, N))
+    rows = []
+    for c in CHUNKS:
+        f = jax.jit(lambda r, k, v, w: wkv_chunked(r, k, v, w, u, None, chunk=c)[0])
+        f(r, k, v, logw)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            f(r, k, v, logw)[0].block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        pred = om.scan_chunk_cost(S, c, batch=B, heads=H, head_dim=N) * 1e6
+        rows.append({"chunk": c, "cpu_us": us, "v5e_pred_us": pred})
+        if csv:
+            print(f"wkv_chunk,chunk={c},cpu={us:.0f}us,v5e_pred={pred:.2f}us")
+    best = om.best_scan_chunk(S, batch=B, heads=H, head_dim=N, candidates=CHUNKS)
+    print(f"wkv_chunk,model_choice={best}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Architecture registry: importing this package registers all assigned archs."""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_configs,
+    register,
+    shape_applicable,
+)
+
+# one module per assigned architecture
+from repro.configs import (  # noqa: F401
+    gemma_2b,
+    mistral_nemo_12b,
+    moonshot_v1_16b_a3b,
+    phi3_mini_3_8b,
+    qwen2_vl_72b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_2b,
+    rwkv6_3b,
+    seamless_m4t_medium,
+    tinyllama_1_1b,
+)
+
+ALL_ARCHS = list_configs()

@@ -1,0 +1,14 @@
+"""The paper's contribution: overhead-managed parallel execution.
+
+overhead.py   — analytic overhead/cost model + crossover solvers
+dispatch.py   — fork-join adaptive matmul dispatch (serial vs sharded)
+sort.py       — distributed sample sort with the paper's pivot strategies
+dependency.py — jaxpr dependency analysis (available parallelism)
+planner.py    — overhead-driven sharding planner for whole models
+"""
+
+from repro.core.overhead import CostBreakdown, OverheadModel  # noqa: F401
+from repro.core.dispatch import adaptive_matmul, decide_matmul, fork_join  # noqa: F401
+from repro.core.sort import distributed_sort  # noqa: F401
+from repro.core.dependency import analyze_dependencies  # noqa: F401
+from repro.core.planner import plan_model  # noqa: F401

@@ -1,0 +1,119 @@
+"""Dependency analysis — the paper's precondition for parallelization.
+
+The paper insists each problem needs "detailed and independent analysis of
+its level of parallelism" before parallelizing.  Here that analysis runs on
+the jaxpr of any JAX function: build the equation DAG, cost each equation,
+and compute
+
+    available parallelism = total cost / critical-path cost
+
+(a work/span analysis).  The planner and docs use it to justify sharding
+choices; a parallelism degree below the chip count is the paper's "sub tasks
+not independent enough" warning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+try:  # Literal moved around across jax versions
+    from jax.extend.core import Literal as _Literal
+except Exception:  # pragma: no cover
+    from jax.core import Literal as _Literal
+
+
+@dataclasses.dataclass
+class DependencyReport:
+    total_flops: float
+    critical_flops: float
+    n_eqns: int
+    by_primitive: Dict[str, float]
+
+    @property
+    def parallelism(self) -> float:
+        return self.total_flops / max(self.critical_flops, 1.0)
+
+    def sufficient_for(self, chips: int) -> bool:
+        return self.parallelism >= chips
+
+    def summary(self) -> str:
+        top = sorted(self.by_primitive.items(), key=lambda kv: -kv[1])[:5]
+        tops = ", ".join(f"{k}={v:.3g}" for k, v in top)
+        return (
+            f"eqns={self.n_eqns} work={self.total_flops:.3g} "
+            f"span={self.critical_flops:.3g} parallelism={self.parallelism:.1f} "
+            f"[{tops}]"
+        )
+
+
+def _eqn_cost(eqn) -> float:
+    """Rough FLOP estimate per jaxpr equation."""
+    prim = eqn.primitive.name
+    outs = eqn.outvars
+
+    def size(v):
+        return float(np.prod(v.aval.shape)) if v.aval.shape else 1.0
+
+    if prim == "dot_general":
+        dnums = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dnums
+        lhs = eqn.invars[0].aval.shape
+        batch = np.prod([lhs[i] for i in lb]) if lb else 1.0
+        contract = np.prod([lhs[i] for i in lc]) if lc else 1.0
+        m = np.prod([s for i, s in enumerate(lhs) if i not in set(lb) | set(lc)])
+        rhs = eqn.invars[1].aval.shape
+        n = np.prod([s for i, s in enumerate(rhs) if i not in set(rb) | set(rc)])
+        return 2.0 * batch * m * n * contract
+    if prim in ("scan", "while", "cond", "pjit", "custom_vjp_call", "custom_jvp_call",
+                "remat", "checkpoint", "closed_call", "shard_map"):
+        inner = None
+        for key in ("jaxpr", "call_jaxpr", "branches", "body_jaxpr"):
+            if key in eqn.params:
+                inner = eqn.params[key]
+                break
+        if inner is None:
+            return sum(size(o) for o in outs)
+        jaxprs = inner if isinstance(inner, (list, tuple)) else [inner]
+        total = 0.0
+        for j in jaxprs:
+            cj = j.jaxpr if hasattr(j, "jaxpr") else j
+            total += sum(_eqn_cost(e) for e in cj.eqns)
+        mult = eqn.params.get("length", 1) if prim == "scan" else 1
+        return total * mult
+    if prim in ("reduce_sum", "reduce_max", "reduce_min", "argmax", "argmin"):
+        return size(eqn.invars[0])
+    if prim == "sort":
+        n = size(eqn.invars[0])
+        return n * max(np.log2(max(n, 2.0)), 1.0)
+    return sum(size(o) for o in outs)
+
+
+def analyze_dependencies(fn, *example_args, **kwargs) -> DependencyReport:
+    closed = jax.make_jaxpr(fn)(*example_args, **kwargs)
+    jaxpr = closed.jaxpr
+    # longest path (jaxpr eqns are topologically sorted)
+    finish: Dict[Any, float] = defaultdict(float)  # var -> critical cost to produce it
+    total = 0.0
+    by_prim: Dict[str, float] = defaultdict(float)
+    for eqn in jaxpr.eqns:
+        c = _eqn_cost(eqn)
+        total += c
+        by_prim[eqn.primitive.name] += c
+        start = max(
+            (finish[v] for v in eqn.invars if not isinstance(v, _Literal)),
+            default=0.0,
+        )
+        for o in eqn.outvars:
+            finish[o] = start + c
+    critical = max(finish.values(), default=0.0)
+    return DependencyReport(
+        total_flops=total,
+        critical_flops=critical,
+        n_eqns=len(jaxpr.eqns),
+        by_primitive=dict(by_prim),
+    )

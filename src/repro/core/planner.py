@@ -1,0 +1,151 @@
+"""Overhead-driven sharding planner — the paper's crossover reasoning applied
+per layer of a transformer (beyond-paper integration).
+
+For each shardable site of a model (attention heads, FFN, MoE experts,
+embedding) the planner compares, with the overhead model, the per-step cost
+of (a) tensor-parallel execution over the ``model`` axis — collective
+overhead per layer — against (b) replicated "serial" execution — zero
+per-layer collectives but C× the weight memory and C× less compute spread.
+It also checks the HBM constraint: strategies that do not fit are discarded
+regardless of speed (the paper's feasibility-before-speedup ordering).
+
+Outputs: a ``Plan`` with per-site decisions, PartitionSpec overrides for
+``distributed.sharding.param_shardings`` and ShardingCtx knob settings
+(scan chunk sizes via the same model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.overhead import CostBreakdown, OverheadModel
+from repro.hw import V5E
+
+
+@dataclasses.dataclass
+class SiteDecision:
+    site: str
+    choice: str  # "shard_model" | "replicate"
+    tp_cost: float  # predicted seconds per step for the TP option
+    rep_cost: float  # predicted seconds for the replicated option
+    reason: str
+
+
+@dataclasses.dataclass
+class Plan:
+    decisions: List[SiteDecision]
+    overrides: Dict[str, P]  # path-regex -> spec (param_shardings hook)
+    rnn_chunk: int
+    attn_chunk: int
+    fits_hbm: bool
+    hbm_per_chip: float
+
+    def summary(self) -> str:
+        lines = [
+            f"  {d.site:12s} -> {d.choice:12s} (tp={d.tp_cost:.2e}s rep={d.rep_cost:.2e}s) {d.reason}"
+            for d in self.decisions
+        ]
+        lines.append(f"  rnn_chunk={self.rnn_chunk} attn_chunk={self.attn_chunk} "
+                     f"hbm/chip={self.hbm_per_chip/1e9:.2f}GB fits={self.fits_hbm}")
+        return "\n".join(lines)
+
+
+def _param_bytes(cfg: ModelConfig, train: bool) -> float:
+    n = cfg.param_count()
+    # bf16 params (+ fp32 master + 2x fp32 adam moments when training)
+    return n * (2 + (4 + 8 if train else 0))
+
+
+def plan_model(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh_shape: Dict[str, int],
+    model: Optional[OverheadModel] = None,
+) -> Plan:
+    om = model or OverheadModel()
+    hw = om.hw
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    tp = mesh_shape.get("model", 1)
+    dp = chips // tp
+    train = shape.kind == "train"
+    tokens_local = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1) // dp
+    d = cfg.d_model
+
+    decisions: List[SiteDecision] = []
+    overrides: Dict[str, P] = {}
+
+    def compare(site: str, m_: int, n_: int, k_: int, patterns: List[str],
+                rep_spec_fn=None):
+        """TP = shard_k/shard_n over `tp` chips with its collective; REP =
+        full matmul locally (weights replicated over the model axis)."""
+        tp_cost = om.best_matmul(m_, n_, k_, chips=tp).total
+        rep = om.matmul_cost(m_, n_, k_, strategy="serial")
+        # replication also forfeits TP sharding of weights -> HBM pressure
+        choice = "shard_model" if tp_cost < rep.total else "replicate"
+        reason = "TP collective amortized by compute" if choice == "shard_model" else \
+            "below crossover: collective+launch overhead exceeds compute saved"
+        decisions.append(SiteDecision(site, choice, tp_cost, rep.total, reason))
+        if choice == "replicate":
+            for pat in patterns:
+                overrides[pat] = None  # caller maps None -> replicated spec
+        return choice
+
+    # --- FFN (per layer): (tokens, d) @ (d, f)
+    if not cfg.is_moe:
+        compare("ffn", tokens_local, cfg.d_ff, d, [r"ffn/(w_in|w_gate|w_out)$"])
+    else:
+        # MoE EP strategy: replicated-psum vs all-to-all (docs; EP keeps psum)
+        costs = om.moe_dispatch_cost(tokens_local, d, top_k=cfg.experts_per_token,
+                                     ep_shards=tp)
+        best = min(costs, key=costs.get)
+        decisions.append(SiteDecision(
+            "moe_dispatch", best, costs["all_to_all"], costs["replicated_psum"],
+            f"EP collective choice {costs}"))
+    # --- attention projections: (tokens, d) @ (d, heads*hd)
+    if cfg.n_heads:
+        hd = cfg.resolved_head_dim
+        compare("attn_qkvo", tokens_local, cfg.n_heads * hd, d,
+                [r"attn/w[qkvo]$"])
+    # --- embedding/unembed: (tokens, d) @ (d, vocab)
+    compare("unembed", tokens_local, cfg.vocab_size, d, [r"(embed|unembed)$"])
+
+    # --- scan chunk choices (sequential-dependency fork-join)
+    rnn_chunk = 64
+    if any(b in ("rwkv", "rglru") for b in cfg.block_pattern) and shape.kind != "decode":
+        heads = max(cfg.d_model // cfg.rnn_head_dim, 1)
+        rnn_chunk = om.best_scan_chunk(
+            shape.seq_len, batch=max(shape.global_batch // dp, 1),
+            heads=heads, head_dim=cfg.rnn_head_dim,
+        )
+    attn_chunk = 1024 if shape.seq_len <= 65536 else 2048
+
+    # --- HBM feasibility under the chosen plan (params sharded over all chips
+    # via FSDP+TP; activations dominated by remat boundaries + caches)
+    pbytes = _param_bytes(cfg, train) / chips
+    if shape.kind == "decode":
+        hd = cfg.resolved_head_dim or 0
+        n_attn = sum(1 for i in range(cfg.n_layers) if cfg.block_kind(i) == "attn")
+        n_local = sum(1 for i in range(cfg.n_layers) if cfg.block_kind(i) == "local")
+        cache = 2 * 2 * cfg.n_kv_heads * hd * shape.global_batch * (
+            n_attn * shape.seq_len + n_local * max(cfg.window_size, 1)
+        )
+        pbytes += cache / chips
+    else:
+        act = 2 * tokens_local * d * cfg.n_layers / max(tp, 1) * 2  # remat boundaries
+        pbytes += act / dp if dp else act
+    fits = pbytes < hw.hbm_bytes * 0.9
+
+    return Plan(
+        decisions=decisions,
+        overrides={k: v for k, v in overrides.items() if v is not None},
+        rnn_chunk=rnn_chunk,
+        attn_chunk=attn_chunk,
+        fits_hbm=fits,
+        hbm_per_chip=pbytes,
+    )

@@ -1,0 +1,1 @@
+from repro.distributed.sharding import ShardingCtx, param_shardings, batch_sharding  # noqa: F401

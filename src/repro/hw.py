@@ -1,0 +1,49 @@
+"""TPU v5e hardware constants — single source of truth for the overhead model
+and the roofline analysis.
+
+The container runs on CPU; these numbers describe the TARGET hardware
+(TPU v5e) and are used analytically (never to gate a runtime path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip TPU hardware description."""
+
+    name: str = "tpu-v5e"
+    # Compute
+    peak_flops_bf16: float = 197e12  # FLOP/s per chip (bf16 MXU)
+    peak_flops_f32: float = 49.25e12  # ~1/4 of bf16 on v5e
+    # Memory
+    hbm_bytes: float = 16e9  # 16 GB HBM per chip
+    hbm_bw: float = 819e9  # bytes/s
+    vmem_bytes: float = 128 * 1024 * 1024  # ~128 MiB VMEM
+    # Interconnect
+    ici_bw_per_link: float = 50e9  # bytes/s per ICI link direction
+    ici_links: int = 4  # 2D torus: 4 links per chip
+    dcn_bw: float = 25e9 / 8  # inter-pod DCN, bytes/s per host share
+    # Fixed overheads (the paper's "thread creation" analogue)
+    kernel_launch_s: float = 2e-6  # per dispatched program
+    collective_base_s: float = 1e-5  # per collective setup/sync latency
+    # MXU tiling
+    mxu_dim: int = 128  # systolic array native tile
+    lane_dim: int = 128  # VPU lane count
+    sublane_dim: int = 8  # f32 sublanes
+
+
+V5E = HardwareSpec()
+
+
+def mxu_aligned(n: int, spec: HardwareSpec = V5E) -> bool:
+    """True if a matmul dim is MXU-tile aligned."""
+    return n % spec.mxu_dim == 0
+
+
+def dtype_bytes(dtype) -> int:
+    import numpy as np
+
+    return np.dtype(dtype).itemsize

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (compute hot-spots) + jit wrappers + jnp oracles.
+
+matmul.py          — blocked MXU matmul (the paper's MM domain, TPU-adapted)
+bitonic_sort.py    — sorting network (the paper's quicksort domain, TPU-adapted)
+flash_attention.py — fused causal attention (skips upper causal blocks)
+wkv.py             — fused chunked WKV6 (VMEM-resident pairwise decay + state)
+ops.py             — public jit'd wrappers (padding, GQA folding, interpret)
+ref.py             — pure-jnp oracles for allclose validation
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,73 @@
+"""Bitonic sort network Pallas kernel — quicksort's TPU replacement.
+
+The paper's quicksort recursion is control-flow-divergent and cannot map to
+the TPU's SIMD VPU (DESIGN.md §2).  The TPU-idiomatic equivalent is a sorting
+NETWORK: data-independent compare-exchange stages, all lanes active every
+step, O(n log^2 n) work.  The i^j partner exchange of the classic bitonic
+network is expressed as a reshape+flip (a free in-register permutation on the
+VPU) rather than a gather.
+
+The kernel sorts each row of a (rows, n) block resident in VMEM; the
+distributed sample sort (core/sort.py) uses it as the per-shard local sort,
+and the grid dimension streams row blocks from HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compare_exchange(x: jax.Array, k: int, j: int) -> jax.Array:
+    """One bitonic stage on rows of x (rows, n): partner = i ^ j, direction
+    ascending iff (i & k) == 0."""
+    rows, n = x.shape
+    # x[i ^ j] along the last axis == flip the middle axis of (n/(2j), 2, j)
+    y = x.reshape(rows, n // (2 * j), 2, j)
+    swapped = y[:, :, ::-1, :].reshape(rows, n)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (rows, n), 1)
+    is_lower = (idx & j) == 0
+    ascending = (idx & k) == 0
+    lo = jnp.minimum(x, swapped)
+    hi = jnp.maximum(x, swapped)
+    keep_lo = jnp.where(ascending, is_lower, ~is_lower)
+    return jnp.where(keep_lo, lo, hi)
+
+
+def _bitonic_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[...]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            x = _compare_exchange(x, k, j)
+            j //= 2
+        k *= 2
+    o_ref[...] = x
+
+
+def bitonic_sort_pallas(
+    x: jax.Array,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sort each row of x (rows, n) ascending; n must be a power of 2
+    (ops.py pads with +inf and strips)."""
+    rows, n = x.shape
+    assert n & (n - 1) == 0, f"n={n} must be a power of 2"
+    assert rows % block_rows == 0
+    return pl.pallas_call(
+        functools.partial(_bitonic_kernel, n=n),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,94 @@
+"""Blocked MXU matmul Pallas kernel.
+
+The paper's Matrix Multiplication domain, TPU-adapted (DESIGN.md §2): instead
+of distributing row-column products over cores/threads, the kernel tiles
+C = A @ B into MXU-aligned (bm, bn, bk) VMEM blocks over a 3D grid.  The K
+grid dimension is "arbitrary" (sequential) — the inter-product additions the
+paper identifies as the synchronization overhead become a VMEM fp32
+accumulator that never leaves the chip; the parallel dimensions are M and N.
+
+Block sizes are chosen by the overhead model (``pick_block_shape``): the
+working set (bm*bk + bk*bn + bm*bn fp32) must fit VMEM and every dim should
+be a multiple of the 128-lane MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.hw import V5E
+
+
+def pick_block_shape(m: int, n: int, k: int, dtype_bytes: int = 4,
+                     vmem_budget: Optional[float] = None) -> Tuple[int, int, int]:
+    """Largest MXU-aligned (bm, bn, bk) whose working set fits VMEM."""
+    budget = vmem_budget or (V5E.vmem_bytes * 0.5)
+    bm = min(512, max(128, m))
+    bn = min(512, max(128, n))
+    bk = min(2048, max(128, k))
+    def fits(bm, bn, bk):
+        return (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4 <= budget
+    while not fits(bm, bn, bk) and bk > 128:
+        bk //= 2
+    while not fits(bm, bn, bk) and (bm > 128 or bn > 128):
+        bm = max(128, bm // 2)
+        bn = max(128, bn // 2)
+    return bm, bn, bk
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_shape: Optional[Tuple[int, int, int]] = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[m,n] = A[m,k] @ B[k,n] with explicit VMEM tiling.
+
+    Shapes must be multiples of the block shape (ops.py pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = block_shape or pick_block_shape(m, n, k, a.dtype.itemsize)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    k_steps = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)

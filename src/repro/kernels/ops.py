@@ -1,0 +1,117 @@
+"""jit'd public wrappers around the Pallas kernels: padding to hardware tile
+multiples, GQA head folding, and interpret-mode selection (interpret=True on
+CPU — the kernel body executes in Python for validation; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitonic_sort import bitonic_sort_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul import matmul_pallas, pick_block_shape
+from repro.kernels.wkv import wkv_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_dim(x, dim: int, mult: int, value=0.0):
+    r = (-x.shape[dim]) % mult
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[dim] = (0, r)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_shape", "interpret"))
+def matmul(a, b, *, block_shape: Optional[Tuple[int, int, int]] = None,
+           interpret: Optional[bool] = None):
+    """Blocked-MXU matmul; pads to 128 multiples and strips."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_dim(_pad_dim(a, 0, 128), 1, 128)
+    bp = _pad_dim(_pad_dim(b, 0, 128), 1, 128)
+    bs = block_shape or pick_block_shape(ap.shape[0], bp.shape[1], ap.shape[1],
+                                         a.dtype.itemsize)
+    bs = tuple(min(v, d) for v, d in zip(bs, (ap.shape[0], bp.shape[1], ap.shape[1])))
+    out = matmul_pallas(ap, bp, block_shape=bs, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort(x, *, interpret: Optional[bool] = None):
+    """Ascending sort of a 1D array or each row of a 2D array."""
+    interpret = _interpret_default() if interpret is None else interpret
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    rows, n = x.shape
+    n_pad = 1 << max((n - 1).bit_length(), 3)
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    xp = jnp.pad(x, ((0, 0), (0, n_pad - n)), constant_values=big) if n_pad != n else x
+    block_rows = 1
+    for cand in (8, 4, 2, 1):
+        if rows % cand == 0:
+            block_rows = cand
+            break
+    out = bitonic_sort_pallas(xp, block_rows=block_rows, interpret=interpret)[:, :n]
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: Optional[bool] = None):
+    """(B, S, Hq, hd) GQA attention via the flash kernel.
+
+    KV heads are repeated to Hq and heads folded into batch.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * hq, x.shape[1], hd)
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    bq = min(block_q, s)
+    bkv = min(block_kv, k.shape[1])
+    qf = _pad_dim(qf, 1, bq)
+    kf = _pad_dim(kf, 1, bkv)
+    vf = _pad_dim(vf, 1, bkv)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, block_q=bq, block_kv=bkv, interpret=interpret
+    )[:, :s]
+    return out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, logw, u, *, chunk: int = 64, interpret: Optional[bool] = None):
+    """Fused chunked WKV6: (B, S, H, N) inputs, u (H, N).
+    Returns (out (B, S, H, N) fp32, state (B, H, N, N) fp32)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, s, h, n = r.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], n)
+    rf, kf, vf = fold(r), fold(k), fold(v)
+    wf = fold(logw)
+    pad = (-s) % chunk
+    if pad:
+        # logw pads with 0 (=> decay 1) and k with 0 => padding is a no-op
+        rf = _pad_dim(rf, 1, chunk)
+        kf = _pad_dim(kf, 1, chunk)
+        vf = _pad_dim(vf, 1, chunk)
+        wf = _pad_dim(wf, 1, chunk)
+    uf = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, n)
+    out, state = wkv_pallas(rf, kf, vf, wf, uf, chunk=chunk, interpret=interpret)
+    out = out[:, :s].reshape(b, h, s, n).transpose(0, 2, 1, 3)
+    return out, state.reshape(b, h, n, n)

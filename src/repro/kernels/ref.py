@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """fp32-accumulated matmul."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    """Row-wise ascending sort."""
+    return jnp.sort(x, axis=-1)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """(BH, S, hd) dense softmax attention, fp32."""
+    bh, s, hd = q.shape
+    skv = k.shape[1]
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, skv), bool), k=skv - s)
+        sc = jnp.where(mask[None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv_ref(r, k, v, logw, u):
+    """Sequential WKV6 recurrence oracle: (B, S, H, N) inputs, u (H, N)."""
+    import jax.numpy as jnp
+
+    b, s, h, n = r.shape
+    S = jnp.zeros((b, h, n, n))
+    outs = []
+    for t in range(s):
+        rt, kt, vt = r[:, t], k[:, t], v[:, t]
+        wt = jnp.exp(logw[:, t])
+        o = jnp.einsum("bhn,bhnm->bhm", rt, S) + jnp.einsum(
+            "bhn,hn,bhn,bhm->bhm", rt, u, kt, vt
+        )
+        S = wt[..., None] * S + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        outs.append(o)
+    return jnp.stack(outs, axis=1), S

@@ -1,0 +1,94 @@
+"""Fused chunked-WKV6 Pallas kernel — the identified §Perf lever for the
+rwkv6-3b train cell (EXPERIMENTS.md hillclimb cell 2).
+
+The XLA chunked WKV materializes the (L, L, N) pairwise decay tensor in HBM
+every chunk (the cell's dominant memory term).  This kernel keeps the whole
+chunk working set — r/k/v/logw blocks, the pairwise tensor, and the carried
+(N, N) state — in VMEM: HBM traffic collapses to the streaming reads of
+r,k,v,w and the write of o (the flash-attention treatment, applied to the
+linear-recurrence chunk).
+
+Grid: (B*H parallel, chunks sequential); the inter-chunk state is VMEM
+scratch carried across the sequential grid dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, state_ref,
+                *, chunk: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # (L, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)  # logw <= 0
+    u = u_ref[0].astype(jnp.float32)  # (N,)
+    S = state_ref[...]  # (N, N)
+
+    cw = jnp.cumsum(w, axis=0)  # logW_t inclusive
+    cwe = cw - w  # exclusive
+    # pairwise decay (L, L, N), masked strictly-lower; all exponents <= 0
+    diff = cwe[:, None, :] - cw[None, :, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (s_idx < t_idx)[:, :, None]
+    dec = jnp.where(tri, jnp.exp(diff), 0.0)
+    A = jnp.sum(r[:, None, :] * dec * k[None, :, :], axis=-1)  # (L, L)
+    A_diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (L,)
+    eye = (t_idx == s_idx).astype(jnp.float32)
+    A = A + eye * A_diag[:, None]
+    o = jnp.dot(A, v, preferred_element_type=jnp.float32)
+    o = o + jnp.dot(r * jnp.exp(cwe), S, preferred_element_type=jnp.float32)
+    o_ref[0, ...] = o.astype(o_ref.dtype)
+
+    wl = cw[-1:, :]  # (1, N) logW_L
+    k_dec = k * jnp.exp(wl - cw)
+    state_ref[...] = jnp.exp(wl[0])[:, None] * S + jnp.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        sout_ref[0, ...] = state_ref[...]
+
+
+def wkv_pallas(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,logw: (BH, S, N) — heads folded into batch; u: (BH, N).
+    Returns (out (BH, S, N) fp32, final state (BH, N, N) fp32).
+    S must be a multiple of ``chunk`` (ops.py pads)."""
+    bh, s, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    kern = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    blk = pl.BlockSpec((1, chunk, n), lambda b, j: (b, j, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_chunks),
+        in_specs=[blk, blk, blk, blk,
+                  pl.BlockSpec((1, n), lambda b, j: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, n, n), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,436 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production mesh on 512
+# placeholder host devices; smoke tests and benches see the 1 real device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell and both production meshes
+(single-pod 16x16 = 256 chips, multi-pod 2x16x16 = 512 chips):
+
+  1. lower + compile the real step function (train_step / prefill / decode
+     serve_step) with ShapeDtypeStruct inputs — no allocation;
+  2. print/record ``compiled.memory_analysis()`` (fits-in-HBM evidence) and
+     ``compiled.cost_analysis()``;
+  3. derive the three roofline terms.  XLA's cost_analysis does not multiply
+     lax.scan trip counts, so FLOPs/bytes/collective-bytes come from FLAT
+     per-layer probe compiles (one per distinct block kind + embedding/loss
+     head), composed as sum(kind_count x probe cost) — exact for the
+     scan-over-layers programs the full compile runs.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.planner import plan_model
+from repro.data.pipeline import make_batch_specs
+from repro.distributed.sharding import (
+    ShardingCtx,
+    batch_sharding,
+    param_shardings,
+    state_sharding,
+)
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.models import build_model
+from repro.models.common import dtype_of
+from repro.models.transformer import _use_scan, layer_apply, layer_init
+from repro.roofline import (
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    fused_memory_bytes,
+    model_flops_for,
+)
+from repro.training.step import TrainLoopConfig, init_train_state, make_serve_step, make_train_step
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_of(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "code_bytes": float(ma.generated_code_size_in_bytes),
+    }
+
+
+def _collectives_of(compiled) -> Dict[str, int]:
+    return collective_bytes_from_hlo(compiled.as_text())
+
+
+def _probe_record(compiled) -> Dict:
+    text = compiled.as_text()
+    cost = _cost_of(compiled)
+    cost["bytes_min"] = float(fused_memory_bytes(text))
+    return {"cost": cost, "collectives": collective_bytes_from_hlo(text)}
+
+
+# ---------------------------------------------------------------------------
+# Flat per-layer probes (accurate roofline terms)
+# ---------------------------------------------------------------------------
+
+
+def _positions_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.pos_type == "mrope":
+        return jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def probe_layer(cfg: ModelConfig, kind: str, mesh, ctx, b: int, s: int,
+                *, train: bool, decode: bool = False):
+    """Compile ONE layer (fwd+bwd if train; single-token w/ state if decode)
+    flat — its cost_analysis and HLO collectives are per-layer-exact.
+    Internal lax.scans are unrolled (cost_analysis ignores trip counts)."""
+    ctx = dataclasses.replace(ctx, unroll_scans=True)
+    dtype = dtype_of(cfg.dtype)
+    key = jax.random.PRNGKey(0)
+    lp_shape = jax.eval_shape(lambda k: layer_init(k, cfg, kind, dtype), key)
+    p_axes = () if ctx.infer_replicate_params else ctx.data_axes
+    lsh = param_shardings(lp_shape, mesh, data_axes=p_axes)
+    bspec = ctx.dp_spec if b % ctx.dp == 0 else None
+    x_sh = NamedSharding(mesh, P(bspec, None, None))
+    pos = _positions_spec(cfg, b, 1 if decode else s)
+
+    if decode:
+        from repro.models.transformer import layer_init_state
+
+        st_shape = jax.eval_shape(
+            lambda: layer_init_state(cfg, kind, b, s, dtype))
+        st_sh = state_sharding(st_shape, mesh, data_axes=ctx.data_axes, scanned=False)
+        x_spec = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)
+
+        def f(lp, x, positions, st):
+            y, new_st, _ = layer_apply(lp, cfg, kind, x, positions, state=st,
+                                       cache_pos=jnp.int32(s // 2), ctx=ctx)
+            return y, new_st
+
+        lowered = jax.jit(f, in_shardings=(lsh, x_sh, None, st_sh),
+                          out_shardings=(x_sh, st_sh)).lower(
+            lp_shape, x_spec, pos, st_shape)
+    else:
+        x_spec = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        if train:
+            def f(lp, x, positions):
+                def scalar(lp, x):
+                    y, _, aux = layer_apply(lp, cfg, kind, x, positions, ctx=ctx)
+                    return jnp.sum(y.astype(jnp.float32)) + aux
+                return jax.grad(scalar, argnums=(0, 1))(lp, x)
+        else:
+            def f(lp, x, positions):
+                y, _, _ = layer_apply(lp, cfg, kind, x, positions, ctx=ctx)
+                return y
+        lowered = jax.jit(f, in_shardings=(lsh, x_sh, None)).lower(
+            lp_shape, x_spec, pos)
+    compiled = lowered.compile()
+    return _probe_record(compiled)
+
+
+def probe_head(cfg: ModelConfig, mesh, ctx, b: int, s: int, *, train: bool,
+               decode: bool = False):
+    """Embedding lookup + final unembed/CE (fwd+bwd if train)."""
+    from repro.models.model import xent_auto
+
+    ctx = dataclasses.replace(ctx, unroll_scans=True)
+    dtype = dtype_of(cfg.dtype)
+    v, d = cfg.vocab_size, cfg.d_model
+    emb_shape = jax.ShapeDtypeStruct((v, d), dtype)
+    vspec = "model" if v % ctx.tp == 0 else None  # seamless: 256206 % 16 != 0
+    dspec = ctx.dp_spec if d % ctx.dp == 0 else None
+    esh = NamedSharding(mesh, P(vspec, dspec))
+    bspec = ctx.dp_spec if b % ctx.dp == 0 else None
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    s_eff = 1 if decode else s
+    tok = jax.ShapeDtypeStruct((b, s_eff), jnp.int32)
+
+    if train:
+        def f(emb, unemb, tokens):
+            def scalar(emb, unemb):
+                x = jnp.take(emb, tokens, axis=0)
+                mask = jnp.ones(tokens.shape, jnp.float32)
+                ce, z = xent_auto(unemb, x, tokens, mask, ctx=ctx)
+                return ce + 1e-4 * z
+            return jax.grad(scalar, argnums=(0, 1))(emb, unemb)
+        lowered = jax.jit(f, in_shardings=(esh, esh, tok_sh)).lower(
+            emb_shape, emb_shape, tok)
+    else:
+        def f(emb, unemb, tokens):
+            x = jnp.take(emb, tokens[:, -1:], axis=0)
+            return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                              unemb.astype(jnp.float32))
+        lowered = jax.jit(f, in_shardings=(esh, esh, tok_sh)).lower(
+            emb_shape, emb_shape, tok)
+    compiled = lowered.compile()
+    return _probe_record(compiled)
+
+
+def _score_traffic_bytes(cfg: ModelConfig, kind: str, b_local: int, s: int,
+                         *, train: bool) -> float:
+    """Per-layer HBM bytes of the (S x S_kv) attention score matrices in the
+    XLA chunked-attention fallback, as counted by fused_memory_bytes (dot
+    touches only): fwd qk-write + pv-read = 2; bwd adds recompute (2) + dP
+    write + dS reads (3).  The Pallas flash kernel (kernels/flash_attention,
+    the TPU target) keeps scores in VMEM: its HBM traffic is just q/k/v/o.
+    Subtracting this yields the flash-adjusted memory term (§Perf iter. 3)."""
+    if kind not in ("attn", "local") or cfg.n_heads == 0:
+        return 0.0
+    s_kv = min(2 * cfg.window_size, s) if kind == "local" else s
+    touches = 7.0 if train else 2.0
+    return touches * b_local * cfg.n_heads * s * s_kv * 4.0
+
+
+def _score_traffic_per_device(cfg: ModelConfig, kind: str, ctx, b_local: int,
+                              s: int, *, train: bool) -> float:
+    """Per-DEVICE score traffic: the probe HLO is post-partitioning; with the
+    residual stream sequence-sharded, q (hence score) rows divide over the
+    model axis too."""
+    tp_div = ctx.tp if (ctx.seq_shard and s % ctx.tp == 0) else 1
+    return _score_traffic_bytes(cfg, kind, b_local, s, train=train) / tp_div
+
+
+def composed_roofline(cfg: ModelConfig, shape: ShapeSpec, mesh, ctx,
+                      label: str) -> Dict[str, Any]:
+    """sum(kind_count x per-layer probe) + head probe -> RooflineTerms."""
+    b = shape.global_batch
+    s = shape.seq_len
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+    counts: Dict[str, int] = {}
+    for i in range(cfg.n_layers):
+        k = cfg.block_kind(i)
+        counts[k] = counts.get(k, 0) + 1
+
+    flops = bytes_ = bytes_min = flash_saved = 0.0
+    coll: Dict[str, float] = {}
+    per_layer: Dict[str, Any] = {}
+    b_local = max(b // ctx.dp, 1)
+    for kind, cnt in counts.items():
+        p = probe_layer(cfg, kind, mesh, ctx, b, s, train=train, decode=decode)
+        per_layer[kind] = {**p, "count": cnt}
+        flops += cnt * p["cost"]["flops"]
+        bytes_ += cnt * p["cost"]["bytes"]
+        bytes_min += cnt * p["cost"]["bytes_min"]
+        if not decode:
+            flash_saved += cnt * min(
+                _score_traffic_per_device(cfg, kind, ctx, b_local, s, train=train),
+                0.9 * p["cost"]["bytes_min"],  # never credit below 10% of layer
+            )
+        for k2, v in p["collectives"].items():
+            coll[k2] = coll.get(k2, 0.0) + cnt * v
+    # enc-dec: approximate encoder layers as `attn` probes too (same dims)
+    if cfg.is_encdec:
+        p = probe_layer(cfg, "attn", mesh, ctx, b, s, train=train, decode=decode)
+        per_layer["encoder"] = {**p, "count": cfg.encoder_layers}
+        flops += cfg.encoder_layers * p["cost"]["flops"]
+        bytes_ += cfg.encoder_layers * p["cost"]["bytes"]
+        bytes_min += cfg.encoder_layers * p["cost"]["bytes_min"]
+        for k2, v in p["collectives"].items():
+            coll[k2] = coll.get(k2, 0.0) + cfg.encoder_layers * v
+
+    ph = probe_head(cfg, mesh, ctx, b, s, train=train, decode=decode)
+    flops += ph["cost"]["flops"]
+    bytes_ += ph["cost"]["bytes"]
+    bytes_min += ph["cost"]["bytes_min"]
+    for k2, v in ph["collectives"].items():
+        coll[k2] = coll.get(k2, 0.0) + v
+
+    # NOTE on units: with SPMD partitioning, XLA cost_analysis reports the
+    # per-device program cost; roofline terms divide total work by chips, so
+    # convert per-device -> global by multiplying by chips.
+    chips = mesh.size
+    # add parameter/optimizer-state traffic (arguments are read each step)
+    terms = RooflineTerms(
+        flops=flops * chips,
+        hbm_bytes=bytes_ * chips,
+        hbm_bytes_min=bytes_min * chips,
+        collective_bytes=sum(coll.values()) * chips,
+        chips=chips,
+        model_flops=model_flops_for(cfg, shape),
+        label=label,
+    )
+    flash_terms = dataclasses.replace(
+        terms, hbm_bytes_min=max(terms.hbm_bytes_min - flash_saved * chips, 0.0),
+        label=label + "+flashkernel")
+    return {"terms": terms.as_dict(),
+            "terms_flash_kernel": flash_terms.as_dict(),
+            "collectives": coll, "per_layer": {
+        k: {"count": v["count"], "flops": v["cost"]["flops"],
+            "collectives": v["collectives"]} for k, v in per_layer.items()}}
+
+
+# ---------------------------------------------------------------------------
+# Full-program lower + compile (the dry-run proper)
+# ---------------------------------------------------------------------------
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                probe: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    label = f"{arch}/{shape_name}/{'multipod' if multi_pod else 'pod'}"
+    if not ok:
+        return {"cell": label, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = data_axes_of(mesh)
+    plan = plan_model(cfg, shape, dict(mesh.shape))
+    ctx = ShardingCtx(mesh=mesh, data_axes=data_axes,
+                      rnn_chunk=plan.rnn_chunk, attn_chunk=plan.attn_chunk)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch_specs = make_batch_specs(cfg, shape, dtype_of(cfg.dtype))
+    batch_sh = batch_sharding(batch_specs, mesh, data_axes)
+
+    with mesh:
+        if shape.kind == "train":
+            loop = TrainLoopConfig()
+            state_shapes = jax.eval_shape(
+                functools.partial(init_train_state, model, loop=loop), key)
+            state_sh = param_shardings(state_shapes, mesh, data_axes=data_axes)
+            step = make_train_step(model, loop, ctx)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state_shapes, batch_specs)
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(model.init, key)
+            psh = param_shardings(params_shapes, mesh, data_axes=data_axes)
+            prefill_fn = lambda p, b: model.prefill(p, b, ctx)
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(psh, batch_sh),
+            ).lower(params_shapes, batch_specs)
+        else:  # decode
+            params_shapes = jax.eval_shape(model.init, key)
+            # §Perf iteration 5 (decode cells): the paper's replicate-vs-shard
+            # crossover at inference.  FSDP-sharded weights cost a per-layer
+            # all-gather per decoded token; with no optimizer state, params
+            # often FIT replicated across the data axes (sharded only over
+            # model).  Replicate when they fit in 60% of HBM; else keep FSDP.
+            from repro.hw import V5E
+
+            tp = mesh.shape.get("model", 1)
+            p_bytes_tp_only = cfg.param_count() * 2 / tp
+            infer_replicate = p_bytes_tp_only < 0.6 * V5E.hbm_bytes
+            ctx = dataclasses.replace(ctx, infer_replicate_params=infer_replicate)
+            psh = param_shardings(
+                params_shapes, mesh,
+                data_axes=(() if infer_replicate else data_axes))
+            state_shapes = jax.eval_shape(
+                functools.partial(model.init_decode_state, shape.global_batch,
+                                  shape.seq_len))
+            scanned = (not cfg.is_encdec) and _use_scan(cfg)
+            dsh = state_sharding(state_shapes, mesh, data_axes=data_axes,
+                                 scanned=scanned)
+            serve = make_serve_step(model, ctx)
+            lowered = jax.jit(
+                serve, in_shardings=(psh, dsh, batch_sh),
+                out_shardings=(None, dsh),
+            ).lower(params_shapes, state_shapes, batch_specs)
+
+        compiled = lowered.compile()
+        mem = _mem_of(compiled)
+        scanned_cost = _cost_of(compiled)
+        record: Dict[str, Any] = {
+            "cell": label,
+            "status": "ok",
+            "mesh": dict(mesh.shape),
+            "chips": mesh.size,
+            "memory_analysis": mem,
+            "scanned_cost_analysis": scanned_cost,
+            "plan_hbm_per_chip_gb": plan.hbm_per_chip / 1e9,
+            "plan_fits_hbm": plan.fits_hbm,
+            "compile_s": time.time() - t0,
+        }
+        if verbose:
+            print(f"[{label}] compiled in {record['compile_s']:.1f}s")
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis(scanned): {scanned_cost}")
+
+        if probe:
+            t1 = time.time()
+            roof = composed_roofline(cfg, shape, mesh, ctx, label)
+            record["roofline"] = roof
+            record["probe_s"] = time.time() - t1
+            if verbose:
+                t = roof["terms"]
+                print(f"  roofline: compute={t['t_compute_s']:.3e}s "
+                      f"memory={t['t_memory_s']:.3e}s "
+                      f"collective={t['t_collective_s']:.3e}s "
+                      f"bound={t['bound']} frac={t['roofline_fraction']:.3f}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    jsonl = open(args.out + "l", "a") if args.out else None  # incremental
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                      probe=not args.no_probe)
+                except Exception as e:  # a failing cell is a bug: surface it
+                    rec = {"cell": f"{arch}/{shape}/{'multipod' if mp else 'pod'}",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[{rec['cell']}] FAILED: {rec['error']}")
+                results.append(rec)
+                if jsonl:
+                    jsonl.write(json.dumps(rec, default=str) + "\n")
+                    jsonl.flush()
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED ===")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pure-JAX model substrate: pytree params + functional apply."""
+
+from repro.models.model import build_model, Model  # noqa: F401

@@ -1,0 +1,244 @@
+"""Attention: GQA/MQA, chunked (flash-style) causal attention, local windows,
+and KV-cache decode.
+
+Two execution paths:
+  * XLA path (used for training/prefill dry-runs and CPU tests):
+    ``chunked_attention`` — lax.scan over KV chunks with an online softmax, so
+    peak memory is O(S * chunk) instead of O(S^2).  For causal masking the
+    scan computes masked blocks too (~2x FLOP overcount on the strictly-upper
+    half); the Pallas flash kernel (kernels/flash_attention.py) is the TPU
+    target that skips them.  The ratio shows up honestly in the roofline's
+    MODEL_FLOPS / HLO_FLOPs term.
+  * Pallas path: kernels/ops.flash_attention (TPU target, validated in
+    interpret mode).
+
+Shapes: q (B, S, Hq, hd); k, v (B, Skv, Hkv, hd); Hq % Hkv == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_query(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,Hq,hd) -> (B,S,Hkv,G,hd)."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+# ---------------------------------------------------------------------------
+# Dense (reference) attention — used at smoke scale and as the oracle.
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-materialization attention. q_offset: absolute position of q[0]
+    relative to k[0] (decode: q_offset = cache position)."""
+    b, sq, hq, hd = q.shape
+    n_kv = k.shape[2]
+    qg = _group_query(q, n_kv).astype(jnp.float32)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bsngd,btnd->bngst", qg * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (XLA path, memory-bounded)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax attention scanning over KV chunks.
+
+    Peak live memory O(B*H*S*chunk).  Exact (bit-for-bit a softmax), masked
+    like dense_attention with q_offset=0.
+    """
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    n_kv = k.shape[2]
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = _group_query(q, n_kv).astype(jnp.float32) * hd ** -0.5
+    qpos = jnp.arange(sq)
+
+    # flash-style recompute: save only the (m, l, acc) carries per KV chunk;
+    # the (sq x chunk) score/prob tensors are recomputed in the backward pass
+    # instead of being stacked across scan steps (4-16x activation saving).
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs  # kj/vj: (B, chunk, n_kv, hd)
+        kpos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bsngd,btnd->bnsgt", qg, kj.astype(jnp.float32))
+        mask = kpos[None, :] < skv
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bnsgt,btnd->bnsgd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, n_kv, sq, hq // n_kv), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, sq, hq // n_kv), jnp.float32)
+    acc0 = jnp.zeros((b, n_kv, sq, hq // n_kv, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc),
+        unroll=n_chunks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Local (sliding-window) attention — exact banded form, O(S * W)
+# ---------------------------------------------------------------------------
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int) -> jax.Array:
+    """Causal sliding-window attention: each token attends to the previous
+    ``window`` tokens (inclusive of itself).  Block form: q blocks of size W
+    attend to [prev block | own block]."""
+    b, s, hq, hd = q.shape
+    n_kv = k.shape[2]
+    w = window
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = q.shape[1]
+    nb = sp // w
+    qb = _group_query(q, n_kv).reshape(b, nb, w, n_kv, hq // n_kv, hd)
+    kb = k.reshape(b, nb, w, n_kv, hd)
+    vb = v.reshape(b, nb, w, n_kv, hd)
+    # previous block (block 0's "previous" is zeros, fully masked)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (b, nb, 2w, n_kv, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    scale = hd ** -0.5
+    s_ = jnp.einsum(
+        "bcsngd,bctnd->bcnsgt", qb.astype(jnp.float32) * scale, k2.astype(jnp.float32)
+    )
+    qpos = jnp.arange(w)
+    kpos = jnp.arange(2 * w) - w  # relative to block start
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - w)
+    # mask out the zero "previous" of block 0
+    blk = jnp.arange(nb)
+    valid_prev = (blk[:, None, None] > 0) | (kpos[None, None, :] >= 0)
+    full_mask = mask[None] & valid_prev
+    s_ = jnp.where(full_mask[None, :, None, :, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bcnsgt,bctnd->bcsngd", p, v2.astype(jnp.float32))
+    out = out.reshape(b, sp, hq, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, hd)
+    k_cache: jax.Array,  # (B, Smax, Hkv, hd)
+    v_cache: jax.Array,
+    cache_pos: jax.Array,  # scalar int32: number of valid tokens INCLUDING new
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, _, hq, hd = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _group_query(q, n_kv).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bsngd,btnd->bnsgt", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos < cache_pos
+    if window:
+        mask &= kpos >= cache_pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnsgt,btnd->bsngd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Insert (B, S_new, Hkv, hd) at position ``pos`` along the seq axis."""
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q, k, v, *, causal=True, window=0, chunk=1024, force_dense: bool = False,
+    unroll: bool = False,
+) -> jax.Array:
+    """Route to the cheapest exact implementation for the shapes at hand.
+
+    This is itself a paper-style fork-join: below the crossover (short
+    sequences) the "serial" dense path wins (no scan/launch overhead); above
+    it, the chunked path is required for memory.  See core/overhead.py for
+    the analytic crossover; the static rule here (S <= 2*chunk) matches it
+    for all assigned shapes.
+    """
+    s = q.shape[1]
+    if window and not force_dense and s > 2 * window:
+        return local_attention(q, k, v, window=window)
+    if force_dense or s <= 2 * chunk:
+        return dense_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                             unroll=unroll)

@@ -1,0 +1,146 @@
+"""Shared model building blocks: norms, embeddings, RoPE / M-RoPE, activations.
+
+All modules are (init_fn, apply_fn) pairs over plain dict pytrees — no
+framework dependency, fully compatible with pjit/shard_map and scan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype=jnp.float32):
+    """Scaled normal (fan-in) init for a projection with input dim ``in_dim``."""
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim,) + tuple(out_shape)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def is_glu(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(16, 24, 24)) -> jax.Array:
+    """Qwen2-VL M-RoPE: 3D (t, h, w) rotary sections.
+
+    x: (..., S, H, hd); positions: (..., S, 3) int32 — per-token (t,h,w) ids.
+    ``sections`` are frequency-pair counts per axis summing to hd/2
+    (scaled if hd differs from 128).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    secs = np.array(sections, dtype=np.int64)
+    secs = (secs * half) // secs.sum()
+    secs[-1] = half - secs[:2].sum()
+    freqs = rope_freqs(hd, theta)  # (half,)
+    # choose which positional axis drives each frequency pair
+    axis_id = np.concatenate([np.full(s, i) for i, s in enumerate(secs)])
+    axis_id = jnp.asarray(axis_id)  # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(axis_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (..., S, half)
+    angles = pos * freqs  # (..., S, half)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positional(x, positions, pos_type: str, theta: float):
+    if pos_type == "rope":
+        return apply_rope(x, positions, theta)
+    if pos_type == "mrope":
+        return apply_mrope(x, positions, theta)
+    if pos_type == "none":
+        return x
+    raise ValueError(pos_type)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, scale: Optional[float] = None):
+    out = jnp.take(table, ids, axis=0)
+    if scale is not None:
+        out = out * jnp.asarray(scale, out.dtype)
+    return out
+
+
+def unembed(table: jax.Array, x: jax.Array):
+    """Logits in fp32 for loss stability."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))

@@ -1,0 +1,228 @@
+"""RWKV-6 (Finch, arXiv:2404.05892) — attention-free time-mix with
+data-dependent per-channel decay.
+
+Recurrence per head (head dim N), per batch:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t           # S: (N, N), w_t in (0,1)
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+
+TPU adaptation — chunked parallel form (the paper's fork-join applied to the
+sequential dependency): the sequence is split into chunks of length L; the
+inter-chunk state is carried by a lax.scan (serial part), while within a
+chunk everything is dense matmul (parallel part) feeding the MXU:
+
+    logW_t  = cumsum(log w)               (per channel, within chunk)
+    o_intra[t] = sum_{s<t} (r_t * exp(logW_{t-1} - logW_s)) . k_s  v_s
+               + (r_t * u * k_t) v_t
+    o_inter[t] = (r_t * exp(logW_{t-1})) @ S_in
+    S_out   = diag(exp(logW_L)) S_in + sum_s (k_s * exp(logW_L - logW_s))^T v_s
+
+All exp() arguments are <= 0 in the used (masked) region, so the chunked form
+is numerically safe at any decay strength — no fp32 overflow for any chunk
+length.  Chunk length is an overhead-model decision (core/overhead.py §scan):
+larger L = fewer serial scan steps but a (L, L, N) pairwise decay tensor.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+LORA_DIM = 64
+
+
+def rwkv_time_mix_init(key, d: int, head_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    n_heads = d // head_dim
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d, (d,), dtype),
+        "w_k": dense_init(ks[1], d, (d,), dtype),
+        "w_v": dense_init(ks[2], d, (d,), dtype),
+        "w_g": dense_init(ks[3], d, (d,), dtype),
+        "w_o": dense_init(ks[4], d, (d,), dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x W1) W2))
+        "decay_w0": jnp.full((d,), -2.0, jnp.float32),
+        "decay_w1": dense_init(ks[5], d, (LORA_DIM,), jnp.float32),
+        "decay_w2": dense_init(ks[6], LORA_DIM, (d,), jnp.float32),
+        "bonus_u": (jax.random.normal(ks[7], (n_heads, head_dim)) * 0.1).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # per-head group norm scale
+    }
+
+
+def _token_shift(x, mu, last: Optional[jax.Array]):
+    """lerp(x_t, x_{t-1}, mu); ``last``: (B,1,D) previous token for decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+    return x + mu * (prev - x)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 64, unroll: bool = False):
+    """Chunked WKV6.
+
+    r,k,v: (B,S,H,N); logw: (B,S,H,N) (<= 0, fp32); u: (H,N);
+    state: (B,H,N,N) fp32 or None.
+    Returns (out (B,S,H,N) fp32, final state).
+    """
+    b, s, h, n = r.shape
+    pad = (-s) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = r.shape[1]
+    nc = sp // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))  # (nc, B, H, L, N)
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # s < t
+
+    # save only the inter-chunk state S per scan step; the (L, L, N) pairwise
+    # decay tensor is recomputed in the backward pass (it is the memory hog)
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(S, xs):
+        rj, kj, vj, wj = xs  # (B,H,L,N)
+        cw = jnp.cumsum(wj, axis=2)  # logW_t (inclusive)
+        cw_exc = cw - wj  # logW_{t-1} (exclusive)
+        # intra-chunk pairwise decay: D[t,s,i] = exp(cw_exc[t] - cw[s]), s<t
+        diff = cw_exc[:, :, :, None, :] - cw[:, :, None, :, :]  # (B,H,L,L,N)
+        dec = jnp.where(tri_lt[None, None, :, :, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bhtn,bhtsn,bhsn->bhts", rj, dec, kj)
+        # bonus diagonal (current token, u-weighted)
+        A_diag = jnp.einsum("bhtn,hn->bht", rj * kj, u)
+        A = A + jnp.eye(chunk)[None, None] * A_diag[:, :, :, None]
+        o_intra = jnp.einsum("bhts,bhsn->bhtn", A, vj)
+        # inter-chunk from carried state
+        r_dec = rj * jnp.exp(cw_exc)
+        o_inter = jnp.einsum("bhtn,bhnm->bhtm", r_dec, S)
+        # state update
+        wl = cw[:, :, -1:, :]  # logW_L
+        k_dec = kj * jnp.exp(wl - cw)
+        S_new = jnp.exp(wl[:, :, 0, :, None]) * S + jnp.einsum(
+            "bhtn,bhtm->bhnm", k_dec, vj
+        )
+        return S_new, o_intra + o_inter
+
+    S_fin, outs = jax.lax.scan(body, state, (rc, kc, vc, wc),
+                               unroll=nc if unroll else 1)
+    # outs: (nc, B, H, L, N) -> (B, S, H, N)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, n)[:, :s]
+    return out, S_fin
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token WKV: r,k,v,logw (B,1,H,N); state (B,H,N,N)."""
+    r1, k1, v1, w1 = (x[:, 0].astype(jnp.float32) for x in (r, k, v, logw))
+    o = jnp.einsum("bhn,bhnm->bhm", r1, state) + jnp.einsum(
+        "bhn,hn,bhn,bhm->bhm", r1, u, k1, v1
+    )
+    state = jnp.exp(w1)[..., None] * state + jnp.einsum("bhn,bhm->bhnm", k1, v1)
+    return o[:, None], state
+
+
+def _group_norm(x, scale, n_heads, eps=1e-5):
+    """Per-head LayerNorm on (B,S,D) viewed as (B,S,H,N)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+def rwkv_time_mix(params, x, head_dim: int, state=None, chunk: int = 64,
+                  unroll: bool = False):
+    """x: (B,S,D).  state (decode): {"S": (B,H,N,N), "shift": (B,1,D)}."""
+    b, s, d = x.shape
+    h = d // head_dim
+    last = state["shift"] if state is not None else None
+    xr = _token_shift(x, params["mu_r"], last)
+    xk = _token_shift(x, params["mu_k"], last)
+    xv = _token_shift(x, params["mu_v"], last)
+    xg = _token_shift(x, params["mu_g"], last)
+    xw = _token_shift(x, params["mu_w"], last)
+
+    r = (xr @ params["w_r"]).reshape(b, s, h, head_dim)
+    k = (xk @ params["w_k"]).reshape(b, s, h, head_dim)
+    v = (xv @ params["w_v"]).reshape(b, s, h, head_dim)
+    g = jax.nn.silu((xg @ params["w_g"]).astype(jnp.float32))
+
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"]) @ params["decay_w2"]
+    logw = -jnp.exp(params["decay_w0"] + lora)  # (B,S,D), <= 0
+    logw = logw.reshape(b, s, h, head_dim)
+
+    # scale k as in RWKV6 to keep state bounded: k *= (1 - w)  [approx]
+    k = k * (1.0 - jnp.exp(logw)).astype(k.dtype)
+
+    if state is not None and s == 1:
+        o, S_new = wkv_step(r, k, v, logw, params["bonus_u"], state["S"])
+        new_state = {"S": S_new, "shift": x[:, -1:]}
+    else:
+        S_in = state["S"] if state is not None else None
+        o, S_new = wkv_chunked(
+            r.transpose(0, 1, 2, 3), k, v, logw, params["bonus_u"], S_in,
+            chunk=chunk, unroll=unroll,
+        )
+        new_state = {"S": S_new, "shift": x[:, -1:]} if state is not None else None
+
+    o = o.reshape(b, s, d)
+    o = _group_norm(o, params["ln_x_scale"], h)
+    out = (o.astype(jnp.float32) * g).astype(x.dtype) @ params["w_o"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Channel mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_channel_mix_init(key, d: int, f: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": dense_init(ks[0], d, (f,), dtype),
+        "w_v": dense_init(ks[1], f, (d,), dtype),
+        "w_r": dense_init(ks[2], d, (d,), dtype),
+    }
+
+
+def rwkv_channel_mix(params, x, state=None):
+    """state (decode): {"shift": (B,1,D)}."""
+    last = state["shift"] if state is not None else None
+    xk = _token_shift(x, params["mu_k"], last)
+    xr = _token_shift(x, params["mu_r"], last)
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    r = jax.nn.sigmoid((xr @ params["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    out = r * (k @ params["w_v"])
+    new_state = {"shift": x[:, -1:]} if state is not None else None
+    return out, new_state
+
+
+def rwkv_init_state(batch: int, d: int, head_dim: int, dtype=jnp.float32):
+    h = d // head_dim
+    return {
+        "time": {
+            "S": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+            "shift": jnp.zeros((batch, 1, d), dtype),
+        },
+        "channel": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }

@@ -1,0 +1,7 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_gradients,
+    CompressionState,
+    init_compression,
+)

@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Plain pytree implementation (no optax dependency): moments live in fp32 and
+inherit each parameter's sharding (FSDP: optimizer state is sharded exactly
+like its parameter, so ZeRO-style partitioning falls out of param_shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms, biases, scalars, gates."""
+    p = "/".join(str(getattr(k, "key", k)) for k in path)
+    return not any(t in p for t in ("ln", "norm", "scale", "bias", "mu_", "lam",
+                                    "decay_w0", "bonus_u", "b_rec", "b_in"))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(path, p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        step = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, mu, nu: upd(path, p, g, mu, nu),
+        params, grads, state["mu"], state["nu"],
+    )
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return (
+        new_params,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gn},
+    )

@@ -1,0 +1,91 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+At 1000+ nodes the pod-axis gradient all-reduce crosses DCN (25 Gb/s vs
+~50 GB/s ICI) and dominates the step; this module trades bytes for steps:
+
+* **top-k sparsification with error feedback** — keep the k largest-magnitude
+  entries per tensor, accumulate the rest into a residual added back next
+  step (Stich et al.; convergence-safe).
+* **int8 quantization** — scale per tensor, round-to-nearest; 4x fewer bytes.
+
+Both are *reference implementations operating on the gradient pytree*; they
+compose (sparsify -> quantize indices' values).  Off by default; enabled via
+TrainLoopConfig.compression.  The overhead model quantifies when they pay:
+compress when T_collective(DCN) > T_compress + T_collective(bytes/ratio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionState:
+    residual: Any  # error-feedback accumulator (pytree like grads)
+
+
+def init_compression(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _topk_mask(g: jax.Array, keep_frac: float) -> jax.Array:
+    if g.ndim == 0 or g.size <= 16:
+        return jnp.ones_like(g, dtype=bool)
+    k = max(int(g.size * keep_frac), 1)
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh)
+
+
+def _quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(
+    grads,
+    state: Optional[CompressionState],
+    *,
+    keep_frac: float = 0.1,
+    quantize: bool = True,
+) -> Tuple[Any, CompressionState, Any]:
+    """Returns (compressed-then-decompressed grads, new state, metrics).
+
+    The round trip models what the receiving end of the cheap all-reduce
+    sees; the actual collective runs on the int8/sparse representation (the
+    wire format is what the byte-count accounting in EXPERIMENTS.md uses).
+    """
+    if state is None:
+        state = init_compression(grads)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r  # error feedback
+        mask = _topk_mask(g32, keep_frac)
+        kept = jnp.where(mask, g32, 0.0)
+        if quantize:
+            q, s = _quantize_int8(kept)
+            kept = _dequantize(q, s)
+        new_r = g32 - kept
+        return kept.astype(g.dtype), new_r
+
+    flat = jax.tree.map(one, grads, state.residual)
+    out = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    sent = sum(
+        max(int(g.size * keep_frac), 1) if g.size > 16 else g.size
+        for g in jax.tree.leaves(grads)
+    )
+    bytes_ratio = (sent * (1 if quantize else 4)) / (total * 4)
+    return out, CompressionState(residual=res), {"wire_bytes_ratio": bytes_ratio}

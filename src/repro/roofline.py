@@ -1,0 +1,204 @@
+"""Roofline analysis from compiled XLA artifacts (§Roofline deliverable).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  XLA does NOT
+multiply while-loop (lax.scan) bodies by their trip count, so the launcher
+derives costs compositionally from FLAT per-layer probes (launch/dryrun.py)
+and uses the scanned full-model compile only for ``memory_analysis`` (the
+fits-in-HBM proof).
+
+collective_bytes is not in cost_analysis: ``collective_bytes_from_hlo``
+parses the compiled HLO text and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+from repro.hw import V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.  %all-gather.1 = bf16[16,4096,512]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?P<types>\(?[a-z0-9_]+\[[^=()]*?\]?\)?(?:\{[^}]*\})?)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind (start/done pairs counted
+    once, on the -start)."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue
+        out[m.group("op")] += _type_bytes(m.group("types"))
+    return dict(out)
+
+
+# ops whose operand/result traffic survives perfect fusion (data-movement or
+# MXU ops); elementwise chains are assumed fully fused on the TPU target.
+_TRAFFIC_OPS = frozenset({
+    "dot", "convolution", "gather", "scatter", "scatter-add",
+    "dynamic-slice", "dynamic-update-slice", "sort",
+})
+_DEF_RE = re.compile(
+    r"%([\w.\-]+) = ([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})? ([a-z0-9\-]+)\(([^)\n]*)\)"
+)
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+
+
+def fused_memory_bytes(hlo_text: str) -> int:
+    """Fusion-aware HBM traffic LOWER bound from dot/gather/scatter/conv/sort
+    ops.  ``cost_analysis()['bytes accessed']`` is the matching UPPER bound
+    (the CPU backend fuses far less than the TPU target, so it counts every
+    elementwise intermediate).
+
+    Per-op traffic model:
+      dot/convolution : result + full operands (MXU streams both)
+      gather / dynamic-slice : 2 x result (reads |result| elements + write;
+                               NOT the whole source operand)
+      scatter / dynamic-update-slice : 3 x updates (read dest rows, read
+                               updates, write) — dest buffer is aliased
+      sort : result + operands (touch-all)
+    """
+    sizes: Dict[str, int] = {}
+    total = 0
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, op, args = m.groups()
+        nbytes = _type_bytes(type_str)
+        sizes[name] = nbytes
+        if op not in _TRAFFIC_OPS:
+            continue
+        arg_sizes = [sizes.get(a, 0) for a in _ARG_RE.findall(args)]
+        if op in ("dot", "convolution", "sort"):
+            total += nbytes + sum(arg_sizes)
+        elif op in ("gather", "dynamic-slice"):
+            total += 2 * nbytes
+        else:  # scatter / scatter-add / dynamic-update-slice
+            # updates operand: the smallest non-trivial arg; fall back to result
+            upd = min((a for a in arg_sizes if a > 0), default=nbytes)
+            total += 3 * upd
+    return total
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float  # upper bound (unfused; CPU-backend bytes accessed)
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0  # 6*N*D analytic
+    hbm_bytes_min: float = 0.0  # lower bound (perfect-fusion traffic)
+    hw: HardwareSpec = V5E
+    label: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.hw.peak_flops_bf16)
+
+    @property
+    def t_memory_upper(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_memory(self) -> float:
+        """Memory term used for the bound call: the perfect-fusion traffic
+        when available (the TPU target fuses elementwise chains), else the
+        unfused upper bound."""
+        b = self.hbm_bytes_min or self.hbm_bytes
+        return b / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        # per-chip collective bytes ride all ICI links of a chip
+        bw = self.hw.ici_bw_per_link * self.hw.ici_links / 2
+        return self.collective_bytes / (self.chips * bw)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU upper bound for this program: useful FLOPs over the
+        time the dominant term forces."""
+        if self.step_time == 0:
+            return 0.0
+        return self.model_flops / (self.step_time * self.chips * self.hw.peak_flops_bf16)
+
+    def as_dict(self) -> dict:
+        return {
+            "label": self.label,
+            "chips": self.chips,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_min": self.hbm_bytes_min,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_upper_s": self.t_memory_upper,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "step_time_s": self.step_time,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens.
+    Decode steps process global_batch tokens; train/prefill seq*batch.
+    Train includes backward (x3 of the forward 2*N*D): the 6 factor.
+    Prefill/decode are forward-only: 2*N*D."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: 1 token per sequence

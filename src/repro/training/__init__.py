@@ -1,0 +1,6 @@
+from repro.training.step import (  # noqa: F401
+    TrainLoopConfig,
+    init_train_state,
+    make_serve_step,
+    make_train_step,
+)

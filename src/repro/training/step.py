@@ -1,0 +1,110 @@
+"""train_step / serve_step factories.
+
+``make_train_step`` builds the jit-able pure step the launcher and the
+dry-run both lower: loss -> grad (remat inside the model) -> optional
+gradient compression -> AdamW -> new (params, opt_state).  Microbatch
+accumulation runs as a lax.scan over microbatches (grad accumulation in
+fp32), which also gives XLA a window to overlap the per-microbatch gradient
+reduce-scatter with the next microbatch's compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_gradients, init_compression
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    microbatches: int = 1  # grad-accumulation factor
+    compression: bool = False
+    compression_keep_frac: float = 0.1
+
+
+def init_train_state(model: Model, key, loop: TrainLoopConfig):
+    params = model.init(key)
+    state = {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if loop.compression:
+        state["compress"] = init_compression(params)
+    return state
+
+
+def make_train_step(model: Model, loop: TrainLoopConfig, ctx=None) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if loop.microbatches > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / loop.microbatches,
+                    acc, grads,
+                )
+                return (acc, loss_acc + loss / loop.microbatches), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((loop.microbatches, -1) + x.shape[1:]), batch
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            metrics: Dict[str, Any] = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_compress = None
+        if loop.compression:
+            grads, new_compress, cmetrics = compress_gradients(
+                grads, state.get("compress"), keep_frac=loop.compression_keep_frac
+            )
+            metrics = {**metrics, **cmetrics}
+
+        lr = warmup_cosine(
+            state["step"], peak_lr=loop.optimizer.lr,
+            warmup_steps=loop.warmup_steps, total_steps=loop.total_steps,
+        )
+        new_params, new_opt, ometrics = adamw_update(
+            params, grads, state["opt"], loop.optimizer, lr=lr
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if new_compress is not None:
+            new_state["compress"] = new_compress
+        return new_state, {"loss": loss, "lr": lr, **metrics, **ometrics}
+
+    return step_fn
+
+
+def make_serve_step(model: Model, ctx=None) -> Callable:
+    """One decode step: greedy next token + updated caches."""
+
+    def serve_fn(params, decode_state, batch):
+        logits, new_state = model.decode_step(params, decode_state, batch, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    return serve_fn

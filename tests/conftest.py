@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# Smoke tests and benches run on the single real CPU device.  The dry-run
+# (and ONLY the dry-run) forces 512 placeholder devices via XLA_FLAGS set in
+# launch/dryrun.py before jax import.  Distributed tests spawn subprocesses.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

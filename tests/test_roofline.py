@@ -1,0 +1,80 @@
+"""Roofline machinery: HLO collective parsing + term arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import (
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    model_flops_for,
+)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[16,4096,512]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,8192]{2,1,0} all-gather(%p0), dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[8,128]{1,0} all-to-all(%z), dimensions={0}
+  %cp.s = f32[256]{0} collective-permute-start(%w)
+  %cp.d = f32[256]{0} collective-permute-done(%cp.s)
+  %ar2 = (f32[32,32]{1,0}, f32[32,32]{1,0}) all-reduce(%u, %v), to_apply=%add
+}
+"""
+
+
+def test_collective_parse_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 4096 * 8192 * 2
+    assert out["all-reduce"] == 1024 * 1024 * 4 + 2 * 32 * 32 * 4  # incl. tuple
+    assert out["reduce-scatter"] == 64 * 1024 * 4
+    assert out["all-to-all"] == 8 * 128 * 4
+    assert out["collective-permute"] == 256 * 4  # start counted, done skipped
+
+
+def test_collective_parse_real_compiled_module():
+    """Parse a real sharded XLA module (8 host devices not required: use the
+    1-device module — zero collectives expected; then a manual psum via jaxpr
+    text is covered by the sample above)."""
+    c = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    out = collective_bytes_from_hlo(c.as_text())
+    assert out == {} or all(v >= 0 for v in out.values())
+
+
+def test_roofline_terms_bound_selection():
+    t = RooflineTerms(flops=1e15, hbm_bytes=1e9, collective_bytes=1e9,
+                      chips=256, model_flops=5e14)
+    assert t.bound == "compute"
+    assert t.useful_flops_fraction == pytest.approx(0.5)
+    t2 = RooflineTerms(flops=1e12, hbm_bytes=1e15, collective_bytes=1e9, chips=256)
+    assert t2.bound == "memory"
+    t3 = RooflineTerms(flops=1e12, hbm_bytes=1e9, collective_bytes=1e14, chips=256)
+    assert t3.bound == "collective"
+
+
+def test_roofline_fraction_bounded():
+    t = RooflineTerms(flops=2e15, hbm_bytes=1.0, collective_bytes=1.0,
+                      chips=256, model_flops=1e15)
+    # compute-bound: roofline fraction = useful fraction of compiled flops
+    assert 0 < t.roofline_fraction <= 1.0
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    de = model_flops_for(cfg, SHAPES["decode_32k"])
+    # train: 6*N*B*S; decode: 2*N*B
+    assert tr == pytest.approx(6 * cfg.param_count() * 4096 * 256, rel=1e-6)
+    assert de == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 4096 * 256, rel=1e-6)
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()
