@@ -1,0 +1,95 @@
+"""Predicted-vs-measured overhead ledger — the paper's comparative-analysis
+tables, closed-loop.
+
+Executes real programs on the running backend with the CostEngine's timing
+hooks armed, for two engines side by side:
+
+  * v5e        — the uncalibrated TPU-v5e datasheet constants (open loop)
+  * calibrated — constants microbenchmarked on THIS backend (costs/calibration)
+
+and prints (a) each engine's matmul/sort crossovers — calibration moves
+them, usually flipping at least one dispatch decision — and (b) the
+calibrated engine's ledger table, where measured/predicted lands near 1.0
+instead of the orders-of-magnitude error the datasheet numbers give on CPU.
+Writes the full ledger to results/ledger.json.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CostEngine, distributed_sort
+from repro.core.costs.calibration import _timeit
+
+ORDERS = (256, 512, 1024, 2048)
+SORT_NS = (10_000, 1_000_000)
+CHIPS = (8, 64)
+
+
+def _time_matmul(n: int, reps: int = 3) -> float:
+    # same probe discipline as the calibration layer, so 'measured' here and
+    # the calibrated spec cannot drift apart
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    return _timeit(lambda: f(a).block_until_ready(), reps)
+
+
+def run(csv=True):
+    engines = {"v5e": CostEngine(), "calibrated": CostEngine.calibrated()}
+    rows = []
+
+    # crossovers per engine: the calibration-sensitivity of the paper's
+    # central quantity (and the decision flips it causes)
+    flips = []
+    for name, eng in engines.items():
+        for c in CHIPS:
+            xo = eng.matmul_crossover_order(c)
+            print(f"cost_ledger,engine={name},chips={c},matmul_crossover={xo},"
+                  f"sort_crossover={eng.sort_crossover_n(c)}")
+    for c in CHIPS:
+        for n in ORDERS + (4096, 8192, 16384):
+            chosen = {name: eng.decide_matmul(n, n, n, chips=c,
+                                              io_at_master=True).choice
+                      for name, eng in engines.items()}
+            if chosen["v5e"] != chosen["calibrated"]:
+                flips.append((c, n, chosen["v5e"], chosen["calibrated"]))
+    for c, n, v5e_s, cal_s in flips:
+        print(f"cost_ledger,decision_flip,chips={c},order={n},"
+              f"v5e={v5e_s},calibrated={cal_s}")
+    print(f"cost_ledger,decision_flips={len(flips)}")
+
+    # measured single-chip matmuls against both engines' serial predictions
+    for n in ORDERS:
+        wall = _time_matmul(n)
+        for name, eng in engines.items():
+            dec = eng.decide_matmul(n, n, n, chips=1, dtype_bytes=4)
+            eng.record_measured(dec, wall, note=f"{name} serial matmul")
+        rows.append({"order": n, "measured_us": wall * 1e6})
+        if csv:
+            preds = {name: eng.decide_matmul(n, n, n, chips=1, dtype_bytes=4)
+                     .predicted_s for name, eng in engines.items()}
+            print(f"cost_ledger,matmul_order={n},measured={wall*1e6:.1f}us,"
+                  f"v5e_pred={preds['v5e']*1e6:.2f}us,"
+                  f"cal_pred={preds['calibrated']*1e6:.2f}us")
+
+    # measured sorts through the real dispatch path (serial on one device)
+    for n in SORT_NS:
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        distributed_sort(x, engine=engines["calibrated"], measure=True)
+        distributed_sort(x, engine=engines["v5e"], measure=True)
+
+    for name, eng in engines.items():
+        s = eng.ledger.summary()
+        print(f"cost_ledger,engine={name},measured={s['measured']},"
+              f"mean_meas_over_pred={s['mean_measured_over_predicted']:.3g}")
+    print("\n--- calibrated-engine ledger (predicted vs measured) ---")
+    print(engines["calibrated"].ledger.table())
+    os.makedirs("results", exist_ok=True)
+    engines["calibrated"].ledger.to_json("results/ledger.json")
+    print("cost_ledger,wrote=results/ledger.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

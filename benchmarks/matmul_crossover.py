@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OverheadModel, decide_matmul
+from repro.core import CostEngine, decide_matmul
 
 ORDERS = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
 CHIPS = (8, 64, 256)
@@ -31,7 +31,8 @@ def _measure_cpu(n: int, reps: int = 3) -> float:
 
 
 def run(csv=True):
-    om = OverheadModel()
+    engine = CostEngine()  # v5e datasheet constants
+    om = engine.model
     rows = []
     for n in ORDERS:
         cpu_s = _measure_cpu(n) if n <= 4096 else float("nan")
@@ -39,7 +40,7 @@ def run(csv=True):
         row = {"order": n, "cpu_measured_us": cpu_s * 1e6,
                "v5e_serial_us": serial.total * 1e6}
         for c in CHIPS:
-            rep = decide_matmul(n, n, n, chips=c)
+            rep = decide_matmul(n, n, n, chips=c, engine=engine)
             row[f"v5e_{c}chips_us"] = rep.chosen.total * 1e6
             row[f"strategy_{c}"] = rep.chosen.strategy
         rows.append(row)
@@ -48,9 +49,14 @@ def run(csv=True):
                   f"serial={row['v5e_serial_us']:.2f}us," +
                   ",".join(f"{c}chips={row[f'v5e_{c}chips_us']:.2f}us/{row[f'strategy_{c}']}"
                            for c in CHIPS))
+    # crossover per engine: datasheet vs backend-calibrated constants — the
+    # paper's hardware-sensitivity point (Yavits/Haque), measured here
+    calibrated = CostEngine.calibrated()
     for c in CHIPS:
-        xo = om.matmul_crossover_order(c)
-        print(f"matmul_crossover,chips={c},crossover_order={xo},paper_cpu_order=1000")
+        xo = engine.matmul_crossover_order(c)
+        xo_cal = calibrated.matmul_crossover_order(c)
+        print(f"matmul_crossover,chips={c},crossover_order={xo},"
+              f"calibrated_order={xo_cal},paper_cpu_order=1000")
     return rows
 
 

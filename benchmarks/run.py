@@ -5,6 +5,8 @@
   wkv_chunk        — fork-join chunk sweep for the RWKV6 recurrence
   kernels_bench    — Pallas kernels (interpret) vs XLA oracles
   roofline_table   — renders §Roofline from results/dryrun_*.json (if present)
+  cost_ledger      — CostEngine predicted-vs-measured ledger, v5e datasheet
+                     vs backend-calibrated constants (decision flips + table)
 
 Prints ``name,key=value,...`` CSV lines.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME]
@@ -22,6 +24,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cost_ledger,
         kernels_bench,
         matmul_crossover,
         roofline_table,
@@ -35,6 +38,7 @@ def main() -> None:
         "wkv_chunk": wkv_chunk.run,
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
+        "cost_ledger": cost_ledger.run,
     }
     failed = []
     for name, fn in suites.items():

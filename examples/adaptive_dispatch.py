@@ -13,25 +13,27 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_configs
 from repro.core import (
-    OverheadModel,
     adaptive_matmul,
     analyze_dependencies,
     decide_matmul,
+    get_engine,
     plan_model,
 )
 
 
 def main():
-    om = OverheadModel()
+    engine = get_engine()  # REPRO_CALIBRATE=1 calibrates it to this backend
 
-    print("== crossovers (paper: matmul order ~1000 on multicore CPU) ==")
+    print(f"== crossovers on {engine.hw.name} "
+          f"(paper: matmul order ~1000 on multicore CPU) ==")
     for chips in (8, 64, 256):
-        print(f"  {chips:3d} chips: matmul order >= {om.matmul_crossover_order(chips):6d}, "
-              f"sort n >= {om.sort_crossover_n(chips)}")
+        print(f"  {chips:3d} chips: matmul order >= "
+              f"{engine.matmul_crossover_order(chips):6d}, "
+              f"sort n >= {engine.sort_crossover_n(chips)}")
 
     print("\n== adaptive matmul decisions ==")
     for n in (256, 2048, 16384):
-        rep = decide_matmul(n, n, n, chips=256)
+        rep = decide_matmul(n, n, n, chips=256, engine=engine)
         print(f"  {n:6d}^3 -> {rep.chosen.strategy:8s} "
               f"predicted speedup {rep.predicted_speedup:5.2f}x "
               f"dominant={rep.chosen.dominant()}")
@@ -52,9 +54,13 @@ def main():
     print("\n== overhead-driven sharding plans (16x16 mesh, train_4k) ==")
     for arch in list_configs():
         plan = plan_model(get_config(arch), SHAPES["train_4k"],
-                          {"data": 16, "model": 16})
+                          {"data": 16, "model": 16}, engine=engine)
         print(f"--- {arch}")
         print(plan.summary())
+
+    print("\n== cost ledger (every decision above; cache stats) ==")
+    print(f"  decision cache: {engine.cache_stats()}")
+    print(engine.ledger.table(max_rows=12))
 
 
 if __name__ == "__main__":

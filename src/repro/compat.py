@@ -1,0 +1,34 @@
+"""Version shims for the jax surface this repo uses.
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+  ``jax`` namespace, and its replication-check kwarg was renamed
+  ``check_rep`` -> ``check_vma``; accept the new spelling on both.
+* Pallas-TPU ``CompilerParams`` was ``TPUCompilerParams`` before the rename.
+
+Import from here so the repo runs on whichever jax the container ships.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(*args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

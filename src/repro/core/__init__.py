@@ -1,13 +1,26 @@
 """The paper's contribution: overhead-managed parallel execution.
 
-overhead.py   — analytic overhead/cost model + crossover solvers
+costs/        — CostEngine: calibrated cost oracle + decision cache +
+                predicted-vs-measured overhead ledger (the authority every
+                fork-join decision consults)
+overhead.py   — compatibility shim over costs/model.py (analytic model)
 dispatch.py   — fork-join adaptive matmul dispatch (serial vs sharded)
 sort.py       — distributed sample sort with the paper's pivot strategies
 dependency.py — jaxpr dependency analysis (available parallelism)
 planner.py    — overhead-driven sharding planner for whole models
 """
 
-from repro.core.overhead import CostBreakdown, OverheadModel  # noqa: F401
+from repro.core.costs import (  # noqa: F401
+    CostBreakdown,
+    CostEngine,
+    CostQuery,
+    Decision,
+    OverheadLedger,
+    OverheadModel,
+    get_engine,
+    resolve_engine,
+    set_engine,
+)
 from repro.core.dispatch import adaptive_matmul, decide_matmul, fork_join  # noqa: F401
 from repro.core.sort import distributed_sort  # noqa: F401
 from repro.core.dependency import analyze_dependencies  # noqa: F401

@@ -1,0 +1,32 @@
+"""Calibrated cost oracle for every fork-join decision (DESIGN.md §3).
+
+model.py       — the analytic overhead model (moved from core/overhead.py)
+calibration.py — microbenchmark the running backend -> calibrated HardwareSpec
+                 (JSON cache keyed by backend fingerprint)
+engine.py      — CostEngine: uniform CostQuery -> Decision interface with a
+                 decision cache; process-wide default via get_engine()
+ledger.py      — predicted-vs-measured overhead ledger (JSON export + table)
+"""
+
+from repro.core.costs.calibration import (  # noqa: F401
+    CalibrationResult,
+    backend_fingerprint,
+    calibrate,
+    load_calibration,
+    save_calibration,
+)
+from repro.core.costs.engine import (  # noqa: F401
+    CostEngine,
+    CostQuery,
+    Decision,
+    get_engine,
+    resolve_engine,
+    set_engine,
+)
+from repro.core.costs.ledger import LedgerEntry, OverheadLedger  # noqa: F401
+from repro.core.costs.model import (  # noqa: F401
+    MATMUL_STRATEGIES,
+    CostBreakdown,
+    OverheadModel,
+    Strategy,
+)

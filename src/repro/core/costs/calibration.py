@@ -1,0 +1,216 @@
+"""Calibration layer: microbenchmark the RUNNING backend into a HardwareSpec.
+
+The analytic model (costs/model.py) is only as good as its constants.  The
+paper's crossover points are hardware-parameter-sensitive (Yavits et al.;
+Haque et al.), so datasheet numbers for the TARGET hardware (TPU v5e) are
+the wrong oracle when the program actually executes somewhere else — the CI
+CPU backend, an interpret-mode Pallas run, a different TPU generation.
+
+``calibrate()`` measures, on whatever backend jax is using right now:
+
+  * kernel launch latency      — dispatch of a trivial jitted program
+  * effective memory bandwidth — large-array copy traffic / wall time
+  * matmul throughput          — FLOP/s at a well-tiled order, per dtype
+  * collective base latency    — tiny psum under a mesh (multi-device only)
+
+and returns a ``HardwareSpec`` with those fields replaced.  Results persist
+to a JSON cache keyed by a backend fingerprint (platform, device kind and
+count, jax version) so repeated runs — and every decision site behind the
+CostEngine — share one calibration instead of re-benchmarking.
+
+Everything here is best-effort: any individual probe failure falls back to
+the base spec's value for that field.  Calibration never runs implicitly;
+the CostEngine only invokes it via ``CostEngine.calibrated()`` or when
+``REPRO_CALIBRATE=1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Optional
+
+from repro.hw import V5E, HardwareSpec
+
+_CACHE_ENV = "REPRO_COST_CACHE"
+_SCHEMA_VERSION = 1
+
+
+def backend_fingerprint() -> str:
+    """Stable id of the running backend: what the calibration cache keys on."""
+    import jax
+
+    dev = jax.devices()[0]
+    parts = (
+        jax.default_backend(),
+        getattr(dev, "device_kind", "unknown"),
+        str(jax.device_count()),
+        jax.__version__,
+    )
+    raw = "|".join(parts)
+    return f"{parts[0]}-{hashlib.sha256(raw.encode()).hexdigest()[:12]}"
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get(_CACHE_ENV)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "calibration"
+
+
+# ---------------------------------------------------------------------------
+# Microbenchmarks
+# ---------------------------------------------------------------------------
+
+
+def _timeit(fn, reps: int) -> float:
+    fn()  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _measure_launch_latency(reps: int = 50) -> float:
+    """Wall time of dispatching a trivial jitted program — the measured
+    analogue of the paper's thread-creation overhead."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.zeros((8,), jnp.float32)
+    f = jax.jit(lambda x: x + 1.0)
+    return _timeit(lambda: f(x).block_until_ready(), reps)
+
+
+def _measure_memory_bw(nbytes: int = 1 << 26, reps: int = 5) -> float:
+    """Effective bytes/s of a read+write sweep over ``nbytes``."""
+    import jax
+    import jax.numpy as jnp
+
+    n = nbytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda x: x * 2.0 + 1.0)
+    dt = _timeit(lambda: f(x).block_until_ready(), reps)
+    return 2.0 * nbytes / max(dt, 1e-9)  # read + write
+
+
+def _measure_matmul_flops(order: int = 1024, reps: int = 3,
+                          dtype: str = "float32") -> float:
+    """Achieved FLOP/s of an order^3 matmul in ``dtype``."""
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((order, order), dtype=dtype)
+    f = jax.jit(lambda a: a @ a)
+    dt = _timeit(lambda: f(a).block_until_ready(), reps)
+    return 2.0 * order**3 / max(dt, 1e-9)
+
+
+def _measure_collective_base(reps: int = 20) -> Optional[float]:
+    """Base latency of a tiny all-reduce; None on single-device backends."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    n = jax.device_count()
+    if n < 2:
+        return None
+    mesh = jax.make_mesh((n,), ("cal",))
+    f = jax.jit(shard_map(
+        lambda x: jax.lax.psum(x, "cal"), mesh=mesh,
+        in_specs=P("cal"), out_specs=P(),
+    ))
+    x = jnp.ones((n,), jnp.float32)
+    return _timeit(lambda: f(x).block_until_ready(), reps)
+
+
+# ---------------------------------------------------------------------------
+# calibrate + persistence
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    spec: HardwareSpec
+    fingerprint: str
+    from_cache: bool
+    measurements: dict  # raw probe values (doc/debug)
+
+
+def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
+    probes = {}
+
+    def attempt(name, fn):
+        try:
+            probes[name] = fn()
+        except Exception:  # any backend quirk: keep the base value
+            probes[name] = None
+
+    attempt("kernel_launch_s", _measure_launch_latency)
+    attempt("hbm_bw", _measure_memory_bw)
+    attempt("peak_flops_f32",
+            lambda: _measure_matmul_flops(matmul_order, dtype="float32"))
+    attempt("peak_flops_bf16",
+            lambda: _measure_matmul_flops(matmul_order, dtype="bfloat16"))
+    attempt("collective_base_s", _measure_collective_base)
+    return probes
+
+
+def calibrate(base: HardwareSpec = V5E, *, cache_dir: Optional[Path] = None,
+              force: bool = False, matmul_order: int = 1024) -> CalibrationResult:
+    """Return a HardwareSpec calibrated to the running backend.
+
+    Reads the JSON cache first (keyed by ``backend_fingerprint()``); runs the
+    microbenchmarks only on a miss or ``force=True``.
+    """
+    fp = backend_fingerprint()
+    cache_dir = Path(cache_dir) if cache_dir is not None else default_cache_dir()
+    cache_path = cache_dir / f"{fp}.json"
+
+    if not force:
+        cached = load_calibration(cache_path, fingerprint=fp)
+        if cached is not None:
+            return CalibrationResult(cached["spec"], fp, True,
+                                     cached.get("measurements", {}))
+
+    probes = _run_probes(base, matmul_order=matmul_order)
+    updates = {k: v for k, v in probes.items() if v is not None}
+    spec = dataclasses.replace(
+        base, name=f"calibrated-{fp}", **updates)
+    save_calibration(cache_path, spec, fingerprint=fp, measurements=probes)
+    return CalibrationResult(spec, fp, False, probes)
+
+
+def save_calibration(path: Path, spec: HardwareSpec, *, fingerprint: str,
+                     measurements: Optional[dict] = None) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "schema": _SCHEMA_VERSION,
+        "fingerprint": fingerprint,
+        "spec": spec.to_dict(),
+        "measurements": measurements or {},
+    }
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(payload, indent=1))
+    tmp.replace(path)
+
+
+def load_calibration(path: Path, *, fingerprint: Optional[str] = None
+                     ) -> Optional[dict]:
+    """Load {spec, measurements} from ``path``; None on miss/mismatch."""
+    try:
+        payload = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return None
+    if payload.get("schema") != _SCHEMA_VERSION:
+        return None
+    if fingerprint is not None and payload.get("fingerprint") != fingerprint:
+        return None
+    return {"spec": HardwareSpec.from_dict(payload["spec"]),
+            "measurements": payload.get("measurements", {})}

@@ -1,0 +1,334 @@
+"""CostEngine: the one authoritative cost oracle behind every fork-join
+decision.
+
+Layering (DESIGN.md §3):
+
+    decision sites (dispatch / sort / planner / scan chunking / MoE)
+        |        uniform CostQuery -> Decision
+        v
+    CostEngine ── decision cache (memoized sweeps for trace-time hot paths)
+        |     \── overhead ledger (predicted breakdown + measured wall time)
+        v
+    OverheadModel (analytic; costs/model.py)
+        |
+        v
+    HardwareSpec — V5E datasheet constants, or a spec calibrated against the
+                   running backend (costs/calibration.py)
+
+Call sites either receive an engine explicitly or share the process-wide
+default from ``get_engine()`` — one engine means one ledger and one
+decision cache, so ``benchmarks/run.py`` / the launchers can report every
+decision the process made.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.core.costs.calibration import CalibrationResult, calibrate
+from repro.core.costs.ledger import LedgerEntry, OverheadLedger
+from repro.core.costs.model import (
+    MATMUL_STRATEGIES,
+    CostBreakdown,
+    OverheadModel,
+)
+from repro.hw import V5E, HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CostQuery:
+    """Hashable description of one fork-join decision problem.
+
+    ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard.
+    ``shape``: the problem dims that kind cares about (documented per
+    ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
+    """
+
+    kind: str
+    shape: Tuple[int, ...]
+    chips: int = 1
+    dtype_bytes: int = 2
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    @classmethod
+    def make(cls, kind: str, shape: Sequence[int], *, chips: int = 1,
+             dtype_bytes: int = 2, **params) -> "CostQuery":
+        return cls(kind, tuple(int(s) for s in shape), int(chips),
+                   int(dtype_bytes), tuple(sorted(params.items())))
+
+    def param(self, key: str, default: Any = None) -> Any:
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def as_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"shape": "x".join(map(str, self.shape)),
+                             "chips": self.chips, "dtype_bytes": self.dtype_bytes}
+        d.update(self.params)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """What the engine chose, with the evidence: the chosen predicted
+    breakdown, the serial/replicated baseline, and every alternative the
+    sweep considered."""
+
+    query: CostQuery
+    choice: str
+    predicted: CostBreakdown
+    baseline: Optional[CostBreakdown] = None
+    alternatives: Tuple[CostBreakdown, ...] = ()
+    value: Any = None  # python-native choice (e.g. int chunk size)
+
+    @property
+    def predicted_s(self) -> float:
+        return self.predicted.total
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Baseline total over chosen total (>= 1.0 when parallel wins)."""
+        if self.baseline is None or self.predicted.total <= 0:
+            return 1.0
+        return self.baseline.total / self.predicted.total
+
+
+class CostEngine:
+    """Calibratable, caching, ledgered cost oracle.
+
+    ``hw``: HardwareSpec to run the analytic model on (V5E datasheet by
+    default); ``model`` overrides the whole analytic model (tests).
+    """
+
+    def __init__(self, hw: Optional[HardwareSpec] = None, *,
+                 model: Optional[OverheadModel] = None,
+                 ledger: Optional[OverheadLedger] = None,
+                 calibration: Optional[CalibrationResult] = None):
+        self.model = model if model is not None else OverheadModel(hw=hw or V5E)
+        self.hw = self.model.hw
+        self.ledger = ledger if ledger is not None else OverheadLedger()
+        self.calibration = calibration
+        self._cache: Dict[CostQuery, Decision] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def calibrated(cls, base: HardwareSpec = V5E, *,
+                   cache_dir: Optional[Path] = None, force: bool = False,
+                   matmul_order: int = 1024, **kw) -> "CostEngine":
+        """Engine whose model runs on a spec microbenchmarked against the
+        RUNNING backend (cached by backend fingerprint)."""
+        result = calibrate(base, cache_dir=cache_dir, force=force,
+                           matmul_order=matmul_order)
+        return cls(hw=result.spec, calibration=result, **kw)
+
+    # ------------------------------------------------------------------
+    # The uniform interface
+    # ------------------------------------------------------------------
+
+    def query(self, q: CostQuery, *, record: bool = True) -> Decision:
+        """CostQuery -> Decision, memoized.  Every call (hit or miss) is
+        appended to the ledger unless ``record=False``."""
+        cached = q in self._cache
+        if cached:
+            self.cache_hits += 1
+            dec = self._cache[q]
+        else:
+            self.cache_misses += 1
+            solver = getattr(self, f"_solve_{q.kind}", None)
+            if solver is None:
+                raise ValueError(f"unknown cost query kind: {q.kind!r}")
+            dec = solver(q)
+            self._cache[q] = dec
+        if record:
+            self.ledger.record(q.kind, q.as_dict(), dec.choice, dec.predicted,
+                               cached=cached)
+        return dec
+
+    def record_measured(self, decision: Decision, seconds: float,
+                        note: str = "") -> LedgerEntry:
+        """Attach a measured wall time for an executed decision (closing the
+        predicted-vs-measured loop outside a ``ledger.measure`` block)."""
+        entry = self.ledger.record(
+            decision.query.kind, decision.query.as_dict(), decision.choice,
+            decision.predicted, note=note or "measured")
+        self.ledger.attach_measurement(entry, seconds)
+        return entry
+
+    # ------------------------------------------------------------------
+    # Solvers (one per decision-site family)
+    # ------------------------------------------------------------------
+
+    def _solve_matmul(self, q: CostQuery) -> Decision:
+        """shape=(m, n, k); params: io_at_master."""
+        m, n, k = q.shape
+        io = bool(q.param("io_at_master", False))
+        cands = tuple(
+            self.model.matmul_cost(m, n, k, chips=q.chips, strategy=s,
+                                   dtype_bytes=q.dtype_bytes, io_at_master=io)
+            for s in MATMUL_STRATEGIES
+        )
+        best = min(cands, key=lambda cb: cb.total)
+        serial = cands[0]
+        return Decision(q, best.strategy, best, baseline=serial,
+                        alternatives=cands, value=best.strategy)
+
+    def _solve_sort(self, q: CostQuery) -> Decision:
+        """shape=(n,)."""
+        (n,) = q.shape
+        serial = self.model.sort_cost(n, dtype_bytes=q.dtype_bytes,
+                                      strategy="serial")
+        cands = [serial]
+        if q.chips > 1:
+            cands.append(self.model.sort_cost(
+                n, chips=q.chips, dtype_bytes=q.dtype_bytes, strategy="parallel"))
+        best = min(cands, key=lambda cb: cb.total)
+        return Decision(q, best.strategy, best, baseline=serial,
+                        alternatives=tuple(cands), value=best.strategy)
+
+    def _solve_scan_chunk(self, q: CostQuery) -> Decision:
+        """shape=(seq, batch, heads, head_dim); params: candidates."""
+        seq, batch, heads, head_dim = q.shape
+        candidates = q.param("candidates", (16, 32, 64, 128, 256))
+        cands = tuple(
+            CostBreakdown(f"chunk_{c}",
+                          self.model.scan_chunk_cost(
+                              seq, c, batch=batch, heads=heads,
+                              head_dim=head_dim, dtype_bytes=q.dtype_bytes),
+                          0.0, 0.0, 0.0)
+            for c in candidates if c <= max(seq, min(candidates))
+        )
+        best = min(cands, key=lambda cb: cb.total)
+        chunk = int(best.strategy.split("_")[1])
+        return Decision(q, best.strategy, best, baseline=cands[0],
+                        alternatives=cands, value=chunk)
+
+    def _solve_moe_dispatch(self, q: CostQuery) -> Decision:
+        """shape=(tokens_local, d); params: top_k; chips = ep_shards."""
+        tokens_local, d = q.shape
+        costs = self.model.moe_dispatch_cost(
+            tokens_local, d, top_k=int(q.param("top_k", 1)),
+            ep_shards=q.chips, dtype_bytes=q.dtype_bytes)
+        cands = tuple(CostBreakdown(name, 0.0, 0.0, sec, 0.0)
+                      for name, sec in sorted(costs.items()))
+        best = min(cands, key=lambda cb: cb.total)
+        baseline = next(c for c in cands if c.strategy == "replicated_psum")
+        return Decision(q, best.strategy, best, baseline=baseline,
+                        alternatives=cands, value=best.strategy)
+
+    def _solve_layer_shard(self, q: CostQuery) -> Decision:
+        """Planner site: shape=(m, n, k) of the layer matmul; chips = TP
+        degree.  Chooses tensor-parallel (with its collective) vs replicated
+        serial execution.  Only WEIGHT-sharding strategies are TP candidates:
+        shard_m splits tokens, which on the model axis is just more data
+        parallelism, not a param-sharding plan."""
+        m, n, k = q.shape
+        tp = min(
+            (self.model.matmul_cost(m, n, k, chips=q.chips, strategy=s,
+                                    dtype_bytes=q.dtype_bytes)
+             for s in ("shard_n", "shard_k", "shard_mn")),
+            key=lambda cb: cb.total,
+        ) if q.chips > 1 else None
+        rep = self.model.matmul_cost(m, n, k, strategy="serial",
+                                     dtype_bytes=q.dtype_bytes)
+        if tp is not None and tp.total < rep.total:
+            return Decision(q, "shard_model", tp, baseline=rep,
+                            alternatives=(tp, rep), value="shard_model")
+        alts = (tp, rep) if tp is not None else (rep,)
+        return Decision(q, "replicate", rep, baseline=rep,
+                        alternatives=alts, value="replicate")
+
+    # ------------------------------------------------------------------
+    # Convenience wrappers (the five decision sites)
+    # ------------------------------------------------------------------
+
+    def decide_matmul(self, m: int, n: int, k: int, *, chips: int,
+                      dtype_bytes: int = 2, io_at_master: bool = False
+                      ) -> Decision:
+        return self.query(CostQuery.make(
+            "matmul", (m, n, k), chips=chips, dtype_bytes=dtype_bytes,
+            io_at_master=io_at_master))
+
+    def decide_sort(self, n: int, *, chips: int, dtype_bytes: int = 4
+                    ) -> Decision:
+        return self.query(CostQuery.make(
+            "sort", (n,), chips=chips, dtype_bytes=dtype_bytes))
+
+    def decide_scan_chunk(self, seq: int, *, batch: int, heads: int,
+                          head_dim: int, dtype_bytes: int = 4,
+                          candidates: Sequence[int] = (16, 32, 64, 128, 256)
+                          ) -> Decision:
+        return self.query(CostQuery.make(
+            "scan_chunk", (seq, batch, heads, head_dim),
+            dtype_bytes=dtype_bytes, candidates=tuple(candidates)))
+
+    def decide_moe_dispatch(self, tokens_local: int, d: int, *, top_k: int,
+                            ep_shards: int, dtype_bytes: int = 2) -> Decision:
+        return self.query(CostQuery.make(
+            "moe_dispatch", (tokens_local, d), chips=ep_shards,
+            dtype_bytes=dtype_bytes, top_k=top_k))
+
+    def decide_layer_shard(self, m: int, n: int, k: int, *, tp: int,
+                           dtype_bytes: int = 2) -> Decision:
+        return self.query(CostQuery.make(
+            "layer_shard", (m, n, k), chips=tp, dtype_bytes=dtype_bytes))
+
+    # ------------------------------------------------------------------
+    # Crossover solvers (delegate to the analytic model on this hw)
+    # ------------------------------------------------------------------
+
+    def matmul_crossover_order(self, chips: int, dtype_bytes: int = 2) -> int:
+        return self.model.matmul_crossover_order(chips, dtype_bytes)
+
+    def sort_crossover_n(self, chips: int) -> int:
+        return self.model.sort_crossover_n(chips)
+
+    def cache_stats(self) -> Dict[str, int]:
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "size": len(self._cache)}
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default engine
+# ---------------------------------------------------------------------------
+
+_default_engine: Optional[CostEngine] = None
+
+
+def get_engine() -> CostEngine:
+    """The shared default engine (one ledger + decision cache per process).
+    ``REPRO_CALIBRATE=1`` makes it calibrate against the running backend on
+    first use."""
+    global _default_engine
+    if _default_engine is None:
+        if os.environ.get("REPRO_CALIBRATE") == "1":
+            _default_engine = CostEngine.calibrated()
+        else:
+            _default_engine = CostEngine()
+    return _default_engine
+
+
+def set_engine(engine: Optional[CostEngine]) -> None:
+    """Replace (or, with None, reset) the process-wide default engine."""
+    global _default_engine
+    _default_engine = engine
+
+
+def resolve_engine(engine: Optional[CostEngine] = None,
+                   model: Optional[OverheadModel] = None) -> CostEngine:
+    """Back-compat shim for call sites that still pass an OverheadModel:
+    an explicit engine wins; an explicit model gets an ephemeral engine
+    (its decisions still ledger to that engine); else the shared default."""
+    if engine is not None:
+        return engine
+    if model is not None:
+        return CostEngine(model=model)
+    return get_engine()

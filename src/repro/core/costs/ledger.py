@@ -1,0 +1,156 @@
+"""Overhead ledger: every fork-join decision, predicted — and, when timing
+hooks run, measured.
+
+The paper's comparative-analysis tables put predicted overhead regimes next
+to measured wall times; open-loop prediction is exactly what this refactor
+retires.  The ledger closes the loop: each CostEngine decision appends an
+entry with its full predicted breakdown, and execution sites that can time
+themselves (benchmarks, eager sort/matmul paths) attach the measured
+seconds to the same entry.  ``table()`` renders the predicted-vs-measured
+comparison; ``to_json()`` exports it for offline analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+from repro.core.costs.model import CostBreakdown
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    seq: int
+    site: str  # matmul | sort | scan_chunk | moe_dispatch | layer_shard
+    query: Dict[str, Any]
+    choice: str
+    predicted_s: float
+    breakdown: Dict[str, float]
+    cached: bool = False
+    measured_s: Optional[float] = None
+    note: str = ""
+
+    @property
+    def ratio(self) -> Optional[float]:
+        """measured / predicted — 1.0 means the model was exactly right."""
+        if self.measured_s is None or self.predicted_s <= 0:
+            return None
+        return self.measured_s / self.predicted_s
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ratio"] = self.ratio
+        return d
+
+
+class OverheadLedger:
+    """Append-only record of decisions; bounded so trace-time hot loops
+    cannot grow it without limit (drops are counted, never silent)."""
+
+    def __init__(self, max_entries: int = 10_000):
+        self.entries: List[LedgerEntry] = []
+        self.max_entries = max_entries
+        self.dropped = 0
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def record(self, site: str, query: Dict[str, Any], choice: str,
+               breakdown: CostBreakdown, *, cached: bool = False,
+               note: str = "") -> LedgerEntry:
+        entry = LedgerEntry(
+            seq=self._seq, site=site, query=dict(query), choice=choice,
+            predicted_s=breakdown.total, breakdown=breakdown.as_dict(),
+            cached=cached, note=note,
+        )
+        self._seq += 1
+        if len(self.entries) >= self.max_entries:
+            self.dropped += 1
+            entry._appended = False
+        else:
+            self.entries.append(entry)
+            entry._appended = True
+        return entry
+
+    def attach_measurement(self, entry: LedgerEntry, seconds: float) -> None:
+        entry.measured_s = seconds
+        # measured entries are the scarce closed-loop signal: re-admit one
+        # the cap dropped rather than losing the measurement silently
+        if not getattr(entry, "_appended", True):
+            self.entries.append(entry)
+            entry._appended = True
+            self.dropped -= 1
+
+    @contextmanager
+    def measure(self, entry: LedgerEntry):
+        """Time a block and attach the wall time to ``entry``.  The caller
+        must make the block synchronous (block_until_ready) for the
+        measurement to mean anything."""
+        t0 = time.perf_counter()
+        try:
+            yield entry
+        finally:
+            self.attach_measurement(entry, time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    # Export / rendering
+    # ------------------------------------------------------------------
+
+    def measured_entries(self) -> List[LedgerEntry]:
+        return [e for e in self.entries if e.measured_s is not None]
+
+    def to_dicts(self) -> List[dict]:
+        return [e.as_dict() for e in self.entries]
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        payload = json.dumps(
+            {"entries": self.to_dicts(), "dropped": self.dropped}, indent=1)
+        if path:
+            parent = os.path.dirname(path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            with open(path, "w") as f:
+                f.write(payload)
+        return payload
+
+    def summary(self) -> Dict[str, Any]:
+        measured = self.measured_entries()
+        ratios = [e.ratio for e in measured if e.ratio is not None]
+        return {
+            "decisions": self._seq,
+            "recorded": len(self.entries),
+            "dropped": self.dropped,
+            "measured": len(measured),
+            "mean_measured_over_predicted":
+                sum(ratios) / len(ratios) if ratios else None,
+        }
+
+    def table(self, *, measured_only: bool = False, max_rows: int = 40) -> str:
+        """Predicted-vs-measured table (the paper's comparative tables,
+        closed-loop).  One row per decision."""
+        rows = self.measured_entries() if measured_only else self.entries
+        header = (f"{'site':12s} {'choice':16s} {'query':34s} "
+                  f"{'predicted':>11s} {'measured':>11s} {'meas/pred':>9s}")
+        lines = [header, "-" * len(header)]
+        for e in rows[:max_rows]:
+            q = ",".join(f"{k}={v}" for k, v in e.query.items())
+            meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
+            ratio = f"{e.ratio:8.2f}x" if e.ratio is not None else "-"
+            lines.append(f"{e.site:12s} {e.choice:16s} {q[:34]:34s} "
+                         f"{e.predicted_s:.3e}s {meas:>11s} {ratio:>9s}")
+        if len(rows) > max_rows:
+            lines.append(f"... {len(rows) - max_rows} more rows "
+                         f"(to_json() for the full ledger)")
+        if self.dropped:
+            lines.append(f"!! {self.dropped} decisions dropped "
+                         f"(ledger cap {self.max_entries})")
+        s = self.summary()
+        if s["mean_measured_over_predicted"] is not None:
+            lines.append(f"mean measured/predicted over {s['measured']} timed "
+                         f"decisions: {s['mean_measured_over_predicted']:.2f}x")
+        return "\n".join(lines)

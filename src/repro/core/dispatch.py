@@ -1,7 +1,7 @@
 """Fork-join adaptive dispatch (the paper's central mechanism).
 
 ``adaptive_matmul`` decides AT TRACE TIME — from static shapes, the active
-mesh and the analytic overhead model — whether a matmul executes serially
+mesh and the CostEngine (core/costs) — whether a matmul executes serially
 (replicated; the paper's single-core path) or parallel under one of the
 sharded strategies, and emits exactly that program.  Below the crossover
 order, parallel execution *is* overhead (paper Fig. 2): thread-creation ->
@@ -9,22 +9,24 @@ kernel launches, inter-core communication -> collectives.
 
 The decision is static (shapes are static in JAX), which matches the paper:
 the problem order is known before execution and the fork-join switch happens
-at dispatch, not per element.
+at dispatch, not per element.  Every decision lands in the engine's ledger;
+the engine's decision cache makes repeated same-shape dispatches (e.g. the
+products of ``matmul_chain``) free.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.overhead import CostBreakdown, OverheadModel
+from repro.compat import shard_map
+from repro.core.costs import CostBreakdown, CostEngine, Decision, OverheadModel
+from repro.core.costs import resolve_engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +34,7 @@ class DispatchReport:
     chosen: CostBreakdown
     serial: CostBreakdown
     chips: int
+    decision: Optional[Decision] = None
 
     @property
     def predicted_speedup(self) -> float:
@@ -49,14 +52,17 @@ def _pad_to(x, dim: int, mult: int):
 
 def decide_matmul(m: int, n: int, k: int, *, chips: int,
                   model: Optional[OverheadModel] = None,
+                  engine: Optional[CostEngine] = None,
                   dtype_bytes: int = 2, io_at_master: bool = True) -> DispatchReport:
     """Standalone dispatch defaults to the paper's setting: inputs live at a
-    master and the result must be gathered back (io_at_master=True)."""
-    model = model or OverheadModel()
-    serial = model.matmul_cost(m, n, k, strategy="serial", dtype_bytes=dtype_bytes)
-    best = model.best_matmul(m, n, k, chips=chips, dtype_bytes=dtype_bytes,
-                             io_at_master=io_at_master)
-    return DispatchReport(chosen=best, serial=serial, chips=chips)
+    master and the result must be gathered back (io_at_master=True).  Inside
+    a model — operands already distributed on a mesh — pass False."""
+    eng = resolve_engine(engine, model)
+    dec = eng.decide_matmul(m, n, k, chips=chips, dtype_bytes=dtype_bytes,
+                            io_at_master=io_at_master)
+    serial = dec.baseline if dec.baseline is not None else dec.predicted
+    return DispatchReport(chosen=dec.predicted, serial=serial, chips=chips,
+                          decision=dec)
 
 
 def adaptive_matmul(
@@ -67,19 +73,28 @@ def adaptive_matmul(
     model: Optional[OverheadModel] = None,
     return_report: bool = False,
     force_strategy: Optional[str] = None,
+    engine: Optional[CostEngine] = None,
+    io_at_master: bool = True,
 ):
     """C = A @ B with overhead-managed serial/parallel dispatch.
 
     A: (m, k); B: (k, n).  With no mesh (or a 1-chip axis) this is the serial
-    path.  Strategies follow core/overhead.matmul_cost.
+    path.  Strategies follow core/costs/model.matmul_cost.
     ``force_strategy`` bypasses the overhead decision (tests/benchmarks).
+    ``io_at_master`` defaults to True — the paper's standalone setting, where
+    inputs conceptually live at a master and the result is gathered back.
+    In-model callers whose operands are ALREADY distributed on the mesh
+    (``matmul_chain`` intermediates, layer code) must pass False: for them
+    the "input management" overhead row does not exist, which moves the
+    serial/parallel crossover all the way down.
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     chips = int(mesh.shape[axis]) if mesh is not None else 1
     dtype_bytes = a.dtype.itemsize
-    report = decide_matmul(m, n, k, chips=chips, model=model, dtype_bytes=dtype_bytes)
+    report = decide_matmul(m, n, k, chips=chips, model=model, engine=engine,
+                           dtype_bytes=dtype_bytes, io_at_master=io_at_master)
     strategy = force_strategy or report.chosen.strategy
 
     if strategy == "serial" or mesh is None or chips == 1:
@@ -130,11 +145,12 @@ def fork_join(
     return parallel_fn if parallel_wins else serial_fn
 
 
-def matmul_chain(matrices, mesh=None, axis="data", model=None):
+def matmul_chain(matrices, mesh=None, axis="data", model=None, engine=None):
     """Matrix-chain multiplication with per-product adaptive dispatch
     (the paper's 'matrix chain multiplication' case): association order by
-    classic DP on FLOP counts, each product dispatched adaptively."""
-    model = model or OverheadModel()
+    classic DP on FLOP counts, each product dispatched adaptively.  All
+    products share one engine, so repeated shapes hit its decision cache."""
+    eng = resolve_engine(engine, model)
     dims = [m.shape[0] for m in matrices] + [matrices[-1].shape[1]]
     nmat = len(matrices)
     # dp over chain order
@@ -156,6 +172,8 @@ def matmul_chain(matrices, mesh=None, axis="data", model=None):
         if i == j:
             return matrices[i]
         s = split[i, j]
-        return adaptive_matmul(mult(i, s), mult(s + 1, j), mesh, axis, model)
+        # chain intermediates are already distributed: io_at_master=False
+        return adaptive_matmul(mult(i, s), mult(s + 1, j), mesh, axis,
+                               engine=eng, io_at_master=False)
 
     return mult(0, nmat - 1)

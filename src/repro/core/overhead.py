@@ -1,275 +1,24 @@
-"""The paper's contribution, made quantitative: an analytic overhead model
-for parallel execution on a TPU mesh.
+"""Compatibility shim — the analytic model now lives in ``core/costs``.
 
 The paper's overhead taxonomy maps to three roofline terms plus two fixed
-overheads (DESIGN.md §2):
+overheads (DESIGN.md §2); the analytic model implementing it moved to
+``repro.core.costs.model`` so the CostEngine (``repro.core.costs.engine``)
+can layer backend calibration, a decision cache and the predicted-vs-
+measured ledger on top.  Every fork-join decision in this framework
+(adaptive matmul dispatch, sample-sort serial/parallel switch, MoE EP
+strategy, scan chunk sizes, the layer sharding planner) consults the
+CostEngine, so the paper's "identify overheads to the root level and manage
+them" has one authoritative implementation.
 
-  compute     T_c  = FLOPs / (chips x peak)          — the useful work
-  memory      T_m  = bytes / (chips x HBM bw)        — "repetitive common
-                                                        computations" pressure
-  collective  T_x  = comm_bytes / link bw            — "inter-core
-                                                        communication overhead"
-  launch      T_l  = per-dispatch latency            — "thread creation"
-  sync        T_s  = per-collective base latency     — "synchronization"
-
-Estimated execution time for a strategy is max(T_c, T_m) + T_x + fixed —
-compute and memory overlap on TPU; collectives only partially overlap (we
-model the worst case, the scheduler recovers some of it; §Perf measures the
-real collective bytes from compiled HLO).
-
-Every fork-join decision in this framework (adaptive matmul dispatch,
-sample-sort serial/parallel switch, MoE EP strategy, scan chunk sizes, the
-layer sharding planner) consults THIS model, so the paper's "identify
-overheads to the root level and manage them" has one authoritative
-implementation.
+Import from ``repro.core.costs`` in new code; this module keeps the old
+``repro.core.overhead`` surface working.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict, Literal, Optional, Tuple
-
-from repro.hw import V5E, HardwareSpec
-
-Strategy = Literal["serial", "shard_m", "shard_n", "shard_k", "shard_mn"]
-
-
-@dataclasses.dataclass(frozen=True)
-class CostBreakdown:
-    """Per-strategy predicted seconds, the paper's Table-1 rows made numeric."""
-
-    strategy: str
-    compute: float
-    memory: float
-    collective: float
-    fixed: float
-
-    @property
-    def total(self) -> float:
-        return max(self.compute, self.memory) + self.collective + self.fixed
-
-    def dominant(self) -> str:
-        terms = {
-            "compute": self.compute,
-            "memory": self.memory,
-            "collective": self.collective,
-            "fixed": self.fixed,
-        }
-        return max(terms, key=terms.get)
-
-
-@dataclasses.dataclass(frozen=True)
-class OverheadModel:
-    hw: HardwareSpec = V5E
-    # efficiency derates (MXU utilization on well-tiled matmuls, ring efficiency)
-    mxu_eff: float = 0.8
-    mem_eff: float = 0.8
-    ici_eff: float = 0.85
-
-    # ------------------------------------------------------------------
-    # Collectives (ring algorithms on a 2D torus)
-    # ------------------------------------------------------------------
-
-    def collective_time(self, nbytes: float, chips: int, kind: str = "all_reduce") -> float:
-        if chips <= 1 or nbytes == 0:
-            return 0.0
-        bw = self.hw.ici_bw_per_link * self.hw.ici_links / 2 * self.ici_eff
-        frac = (chips - 1) / chips
-        factor = {
-            "all_reduce": 2.0 * frac,
-            "all_gather": frac,
-            "reduce_scatter": frac,
-            "all_to_all": frac / 2,
-            "broadcast": frac,
-        }[kind]
-        return factor * nbytes / bw + self.hw.collective_base_s
-
-    # ------------------------------------------------------------------
-    # Matmul (the paper's Matrix Multiplication domain)
-    # ------------------------------------------------------------------
-
-    def matmul_cost(
-        self,
-        m: int,
-        n: int,
-        k: int,
-        *,
-        chips: int = 1,
-        strategy: Strategy = "serial",
-        dtype_bytes: int = 2,
-        flops_per_mac: int = 2,
-        io_at_master: bool = False,
-    ) -> CostBreakdown:
-        """Predicted cost of C[m,n] = A[m,k] @ B[k,n] under a strategy.
-
-        serial   — one chip does everything (paper: single-core execution)
-        shard_m  — rows of A over chips; no collective (master-slave row sets)
-        shard_n  — cols of B over chips; all-gather of C if replication needed
-        shard_k  — inner dim over chips; all-reduce of C (synchronization at
-                   inter-product additions — the paper's matmul overhead)
-        shard_mn — 2D block; all-gather of A rows + B cols inside the grid
-
-        ``io_at_master=True`` models the paper's standalone setting: the
-        inputs start on ONE core (master) and the result must end there, so
-        a parallel strategy additionally pays input scatter/broadcast and
-        output gather (the paper's "input management" overhead row).  Inside
-        a model, weights/activations are already distributed -> False.
-        """
-        flops = flops_per_mac * m * n * k
-        bytes_total = dtype_bytes * (m * k + k * n + m * n)
-        peak = self.hw.peak_flops_bf16 if dtype_bytes == 2 else self.hw.peak_flops_f32
-        eff_peak = peak * self.mxu_eff
-        eff_bw = self.hw.hbm_bw * self.mem_eff
-
-        if strategy == "serial" or chips == 1:
-            return CostBreakdown(
-                "serial", flops / eff_peak, bytes_total / eff_bw, 0.0,
-                self.hw.kernel_launch_s,
-            )
-        c = chips
-        if strategy == "shard_m":
-            comm = 0.0
-            comm_kind = "all_gather"
-            local_bytes = dtype_bytes * (m * k / c + k * n + m * n / c)
-        elif strategy == "shard_n":
-            comm = dtype_bytes * m * n
-            comm_kind = "all_gather"
-            local_bytes = dtype_bytes * (m * k + k * n / c + m * n / c)
-        elif strategy == "shard_k":
-            comm = dtype_bytes * m * n
-            comm_kind = "all_reduce"
-            local_bytes = dtype_bytes * (m * k / c + k * n / c + m * n)
-        elif strategy == "shard_mn":
-            r = int(math.sqrt(c))
-            comm = dtype_bytes * (m * k / r + k * n / r)
-            comm_kind = "all_gather"
-            local_bytes = dtype_bytes * (m * k / r + k * n / r + m * n / c)
-        else:
-            raise ValueError(strategy)
-        io = 0.0
-        if io_at_master:
-            # paper Table 1 "input management": scatter inputs from the
-            # master, gather the result back (ring costs)
-            frac = (c - 1) / c
-            bw = self.hw.ici_bw_per_link * self.hw.ici_links / 2 * self.ici_eff
-            in_bytes = dtype_bytes * (m * k + k * n)
-            out_bytes = dtype_bytes * m * n
-            io = frac * (in_bytes + out_bytes) / bw + 2 * self.hw.collective_base_s
-        return CostBreakdown(
-            strategy,
-            flops / c / eff_peak,
-            local_bytes / eff_bw,
-            self.collective_time(comm, c, comm_kind) + io,
-            self.hw.kernel_launch_s,
-        )
-
-    def best_matmul(self, m: int, n: int, k: int, *, chips: int,
-                    dtype_bytes: int = 2, io_at_master: bool = False) -> CostBreakdown:
-        cands = [
-            self.matmul_cost(m, n, k, chips=chips, strategy=s, dtype_bytes=dtype_bytes,
-                             io_at_master=io_at_master)
-            for s in ("serial", "shard_m", "shard_n", "shard_k", "shard_mn")
-        ]
-        return min(cands, key=lambda cb: cb.total)
-
-    def matmul_crossover_order(self, chips: int, dtype_bytes: int = 2) -> int:
-        """Smallest square order where ANY parallel strategy beats serial in
-        the paper's standalone setting (inputs at the master) — the paper's
-        'minimum 1000 and above' claim, re-derived for this hardware."""
-        lo, hi = 1, 1 << 20
-        def parallel_wins(n: int) -> bool:
-            serial = self.matmul_cost(n, n, n, strategy="serial", dtype_bytes=dtype_bytes)
-            best = self.best_matmul(n, n, n, chips=chips, dtype_bytes=dtype_bytes,
-                                    io_at_master=True)
-            return best.strategy != "serial" and best.total < serial.total
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if parallel_wins(mid):
-                hi = mid
-            else:
-                lo = mid + 1
-        return lo
-
-    # ------------------------------------------------------------------
-    # Sorting (the paper's quicksort domain, TPU-adapted)
-    # ------------------------------------------------------------------
-
-    def sort_cost(self, n: int, *, chips: int = 1, dtype_bytes: int = 4,
-                  strategy: str = "serial") -> CostBreakdown:
-        """serial: one-chip bitonic network O(n log^2 n) VPU compare-exchange.
-        parallel: sample sort = local sort + splitter broadcast + all-to-all
-        + local merge (paper: pivot placement by master, then independent
-        recursion per core)."""
-        log2n = max(math.log2(max(n, 2)), 1.0)
-        vpu_ops_per_s = self.hw.peak_flops_f32  # compare-exchange ~ 1 vector op
-        if strategy == "serial" or chips == 1:
-            ops = n * log2n * (log2n + 1) / 2
-            return CostBreakdown(
-                "serial", ops / vpu_ops_per_s,
-                dtype_bytes * n * log2n / (self.hw.hbm_bw * self.mem_eff),
-                0.0, self.hw.kernel_launch_s,
-            )
-        nl = n / chips
-        log2nl = max(math.log2(max(nl, 2)), 1.0)
-        local_ops = 2 * nl * log2nl * (log2nl + 1) / 2  # sort + merge after exchange
-        exchange = self.collective_time(dtype_bytes * nl, chips, "all_to_all")
-        splitters = self.collective_time(dtype_bytes * chips, chips, "all_gather")
-        return CostBreakdown(
-            "sample_sort", local_ops / vpu_ops_per_s,
-            dtype_bytes * nl * log2nl / (self.hw.hbm_bw * self.mem_eff),
-            exchange + splitters,
-            self.hw.kernel_launch_s * 3,
-        )
-
-    def sort_crossover_n(self, chips: int) -> int:
-        lo, hi = 1, 1 << 34
-        def parallel_wins(n: int) -> bool:
-            return (self.sort_cost(n, chips=chips, strategy="parallel").total
-                    < self.sort_cost(n, strategy="serial").total)
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if parallel_wins(mid):
-                hi = mid
-            else:
-                lo = mid + 1
-        return lo
-
-    # ------------------------------------------------------------------
-    # Sequential-recurrence chunking (WKV / RG-LRU fork-join)
-    # ------------------------------------------------------------------
-
-    def scan_chunk_cost(self, seq: int, chunk: int, *, batch: int, heads: int,
-                        head_dim: int, dtype_bytes: int = 4) -> float:
-        """Chunked linear-recurrence cost: n_chunks serial steps, each with an
-        (L,L,N) pairwise intra-chunk tensor + state update matmuls."""
-        n_chunks = math.ceil(seq / chunk)
-        intra_flops = 2 * batch * heads * chunk * chunk * head_dim * 2
-        state_flops = 2 * batch * heads * chunk * head_dim * head_dim * 2
-        per_chunk = (intra_flops + state_flops) / (self.hw.peak_flops_f32 * self.mxu_eff)
-        pairwise_bytes = batch * heads * chunk * chunk * head_dim * dtype_bytes
-        per_chunk = max(per_chunk, pairwise_bytes / (self.hw.hbm_bw * self.mem_eff))
-        return n_chunks * (per_chunk + self.hw.kernel_launch_s)
-
-    def best_scan_chunk(self, seq: int, *, batch: int, heads: int, head_dim: int,
-                        candidates=(16, 32, 64, 128, 256)) -> int:
-        return min(
-            (c for c in candidates if c <= max(seq, 16)),
-            key=lambda c: self.scan_chunk_cost(seq, c, batch=batch, heads=heads,
-                                               head_dim=head_dim),
-        )
-
-    # ------------------------------------------------------------------
-    # MoE dispatch strategy (EP overhead management)
-    # ------------------------------------------------------------------
-
-    def moe_dispatch_cost(self, tokens_local: int, d: int, *, top_k: int,
-                          ep_shards: int, dtype_bytes: int = 2
-                          ) -> Dict[str, float]:
-        """Compare replication-EP (psum of outputs over the model axis) vs
-        all-to-all EP (route tokens to expert owners and back)."""
-        psum = self.collective_time(tokens_local * d * dtype_bytes, ep_shards, "all_reduce")
-        a2a = 2 * self.collective_time(
-            tokens_local * top_k * d * dtype_bytes, ep_shards, "all_to_all"
-        )
-        return {"replicated_psum": psum, "all_to_all": a2a}
+from repro.core.costs.model import (  # noqa: F401
+    MATMUL_STRATEGIES,
+    CostBreakdown,
+    OverheadModel,
+    Strategy,
+)

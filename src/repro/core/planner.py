@@ -2,28 +2,30 @@
 per layer of a transformer (beyond-paper integration).
 
 For each shardable site of a model (attention heads, FFN, MoE experts,
-embedding) the planner compares, with the overhead model, the per-step cost
-of (a) tensor-parallel execution over the ``model`` axis — collective
-overhead per layer — against (b) replicated "serial" execution — zero
-per-layer collectives but C× the weight memory and C× less compute spread.
-It also checks the HBM constraint: strategies that do not fit are discarded
+embedding) the planner asks the CostEngine to compare the per-step cost of
+(a) tensor-parallel execution over the ``model`` axis — collective overhead
+per layer — against (b) replicated "serial" execution — zero per-layer
+collectives but C× the weight memory and C× less compute spread.  It also
+checks the HBM constraint: strategies that do not fit are discarded
 regardless of speed (the paper's feasibility-before-speedup ordering).
 
 Outputs: a ``Plan`` with per-site decisions, PartitionSpec overrides for
 ``distributed.sharding.param_shardings`` and ShardingCtx knob settings
-(scan chunk sizes via the same model).
+(scan chunk sizes via the same engine).  Replicate decisions emit REAL
+replicated specs (model axis dropped, FSDP axes kept) so they actually
+reach ``param_shardings`` — overrides apply to the logical (unscanned)
+shape and are divisibility-checked there.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.core.overhead import CostBreakdown, OverheadModel
-from repro.hw import V5E
+from repro.core.costs import CostEngine, OverheadModel, resolve_engine
 
 
 @dataclasses.dataclass
@@ -51,6 +53,9 @@ class Plan:
         ]
         lines.append(f"  rnn_chunk={self.rnn_chunk} attn_chunk={self.attn_chunk} "
                      f"hbm/chip={self.hbm_per_chip/1e9:.2f}GB fits={self.fits_hbm}")
+        if self.overrides:
+            lines.append("  overrides: " + ", ".join(
+                f"{pat} -> {spec}" for pat, spec in self.overrides.items()))
         return "\n".join(lines)
 
 
@@ -65,9 +70,10 @@ def plan_model(
     shape: ShapeSpec,
     mesh_shape: Dict[str, int],
     model: Optional[OverheadModel] = None,
+    engine: Optional[CostEngine] = None,
 ) -> Plan:
-    om = model or OverheadModel()
-    hw = om.hw
+    eng = resolve_engine(engine, model)
+    hw = eng.hw
     chips = 1
     for v in mesh_shape.values():
         chips *= v
@@ -76,53 +82,67 @@ def plan_model(
     train = shape.kind == "train"
     tokens_local = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1) // dp
     d = cfg.d_model
+    # FSDP axis group for replicated-site overrides: every non-model axis,
+    # in mesh order (matches sharding.param_shardings' data_axes grouping)
+    fsdp_axes = tuple(a for a in mesh_shape if a != "model")
+    fsdp = fsdp_axes if len(fsdp_axes) > 1 else (fsdp_axes[0] if fsdp_axes else None)
 
     decisions: List[SiteDecision] = []
     overrides: Dict[str, P] = {}
 
-    def compare(site: str, m_: int, n_: int, k_: int, patterns: List[str],
-                rep_spec_fn=None):
-        """TP = shard_k/shard_n over `tp` chips with its collective; REP =
-        full matmul locally (weights replicated over the model axis)."""
-        tp_cost = om.best_matmul(m_, n_, k_, chips=tp).total
-        rep = om.matmul_cost(m_, n_, k_, strategy="serial")
-        # replication also forfeits TP sharding of weights -> HBM pressure
-        choice = "shard_model" if tp_cost < rep.total else "replicate"
+    def compare(site: str, m_: int, n_: int, k_: int,
+                patterns: List[Tuple[str, P]]):
+        """TP = best sharded strategy over `tp` chips with its collective;
+        REP = full matmul locally (weights replicated over the model axis).
+        On replicate, emit the per-pattern replicated spec (FSDP kept)."""
+        dec = eng.decide_layer_shard(m_, n_, k_, tp=tp)
+        rep_cost = dec.baseline.total
+        tp_cost = min((a.total for a in dec.alternatives if a.strategy != "serial"),
+                      default=rep_cost)
+        choice = dec.choice
         reason = "TP collective amortized by compute" if choice == "shard_model" else \
             "below crossover: collective+launch overhead exceeds compute saved"
-        decisions.append(SiteDecision(site, choice, tp_cost, rep.total, reason))
+        decisions.append(SiteDecision(site, choice, tp_cost, rep_cost, reason))
         if choice == "replicate":
-            for pat in patterns:
-                overrides[pat] = None  # caller maps None -> replicated spec
+            for pat, rep_spec in patterns:
+                overrides[pat] = rep_spec
         return choice
 
     # --- FFN (per layer): (tokens, d) @ (d, f)
     if not cfg.is_moe:
-        compare("ffn", tokens_local, cfg.d_ff, d, [r"ffn/(w_in|w_gate|w_out)$"])
+        compare("ffn", tokens_local, cfg.d_ff, d, [
+            (r"ffn/(w_in|w_gate)$", P(fsdp, None)),   # (D, F)
+            (r"ffn/w_out$", P(None, fsdp)),           # (F, D)
+        ])
     else:
         # MoE EP strategy: replicated-psum vs all-to-all (docs; EP keeps psum)
-        costs = om.moe_dispatch_cost(tokens_local, d, top_k=cfg.experts_per_token,
-                                     ep_shards=tp)
-        best = min(costs, key=costs.get)
+        dec = eng.decide_moe_dispatch(tokens_local, d,
+                                      top_k=cfg.experts_per_token, ep_shards=tp)
+        costs = {a.strategy: a.total for a in dec.alternatives}
         decisions.append(SiteDecision(
-            "moe_dispatch", best, costs["all_to_all"], costs["replicated_psum"],
-            f"EP collective choice {costs}"))
-    # --- attention projections: (tokens, d) @ (d, heads*hd)
+            "moe_dispatch", dec.choice, costs["all_to_all"],
+            costs["replicated_psum"], f"EP collective choice {costs}"))
+    # --- attention projections: (tokens, d) @ (d, heads*hd); cross-attention
+    # shares the layout, so enc-dec cross/* weights follow the same decision
     if cfg.n_heads:
         hd = cfg.resolved_head_dim
-        compare("attn_qkvo", tokens_local, cfg.n_heads * hd, d,
-                [r"attn/w[qkvo]$"])
+        compare("attn_qkvo", tokens_local, cfg.n_heads * hd, d, [
+            (r"(attn|cross)/w[qkv]$", P(fsdp, None, None)),  # (D, H, hd)
+            (r"(attn|cross)/wo$", P(None, fsdp)),            # (H*hd, D)
+        ])
     # --- embedding/unembed: (tokens, d) @ (d, vocab)
-    compare("unembed", tokens_local, cfg.vocab_size, d, [r"(embed|unembed)$"])
+    compare("unembed", tokens_local, cfg.vocab_size, d, [
+        (r"(embed|unembed)$", P(None, fsdp)),         # (V, D)
+    ])
 
     # --- scan chunk choices (sequential-dependency fork-join)
     rnn_chunk = 64
     if any(b in ("rwkv", "rglru") for b in cfg.block_pattern) and shape.kind != "decode":
         heads = max(cfg.d_model // cfg.rnn_head_dim, 1)
-        rnn_chunk = om.best_scan_chunk(
+        rnn_chunk = eng.decide_scan_chunk(
             shape.seq_len, batch=max(shape.global_batch // dp, 1),
             heads=heads, head_dim=cfg.rnn_head_dim,
-        )
+        ).value
     attn_chunk = 1024 if shape.seq_len <= 65536 else 2048
 
     # --- HBM feasibility under the chosen plan (params sharded over all chips
@@ -143,7 +163,7 @@ def plan_model(
 
     return Plan(
         decisions=decisions,
-        overrides={k: v for k, v in overrides.items() if v is not None},
+        overrides=overrides,
         rnn_chunk=rnn_chunk,
         attn_chunk=attn_chunk,
         fits_hbm=fits,

@@ -26,16 +26,17 @@ that random pivots perform worst.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.overhead import OverheadModel
+from repro.compat import shard_map
+from repro.core.costs import CostEngine, OverheadModel, resolve_engine
 
 PIVOT_STRATEGIES = ("left", "right", "mean", "random", "sampled")
 _INF = jnp.inf
@@ -90,21 +91,30 @@ def distributed_sort(
     pivot: str = "sampled",
     model: Optional[OverheadModel] = None,
     force_parallel: bool = False,
+    engine: Optional[CostEngine] = None,
+    measure: bool = False,
 ) -> Tuple[jax.Array, SortReport]:
     """Sort a 1D array with overhead-managed serial/parallel dispatch.
 
     Returns (sorted array (n,), report).  The parallel path pads internally
-    (worst-case-safe capacity) and compacts before returning.
+    (worst-case-safe capacity) and compacts before returning.  The
+    serial/parallel switch consults the CostEngine; ``measure=True``
+    additionally times the executed path (synchronously) and attaches the
+    wall time to the engine's ledger entry — the predicted-vs-measured hook.
     """
-    model = model or OverheadModel()
+    eng = resolve_engine(engine, model)
     n = x.shape[0]
     chips = int(mesh.shape[axis]) if mesh is not None else 1
 
-    serial_cost = model.sort_cost(n, strategy="serial")
-    par_cost = model.sort_cost(n, chips=chips, strategy="parallel")
-    parallel = force_parallel or (chips > 1 and par_cost.total < serial_cost.total)
+    decision = eng.decide_sort(n, chips=chips, dtype_bytes=x.dtype.itemsize)
+    parallel = force_parallel or decision.choice != "serial"
+    t0 = time.perf_counter() if measure else 0.0
     if not parallel or chips == 1 or mesh is None:
-        return jnp.sort(x), SortReport("serial", pivot, n, chips)
+        out = jnp.sort(x)
+        if measure:
+            out.block_until_ready()
+            eng.record_measured(decision, time.perf_counter() - t0)
+        return out, SortReport("serial", pivot, n, chips)
 
     pad = (-n) % chips
     xp = jnp.pad(x, (0, pad), constant_values=_INF)
@@ -139,5 +149,7 @@ def distributed_sort(
     counts_np = np.asarray(jax.device_get(counts))
     seg_np = np.asarray(jax.device_get(segments))
     out = np.concatenate([seg_np[i, : counts_np[i]] for i in range(chips)])[:n]
+    if measure:
+        eng.record_measured(decision, time.perf_counter() - t0)
     report = SortReport("sample_sort", pivot, n, chips, counts=counts_np)
     return jnp.asarray(out), report

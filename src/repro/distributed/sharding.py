@@ -47,6 +47,10 @@ class ShardingCtx:
     # inference: replicate params over the data axes (no FSDP gathers); set
     # by the overhead-model fit check in launch/dryrun.py and serve paths.
     infer_replicate_params: bool = False
+    # the CostEngine whose plan produced this ctx (ledger + decision cache);
+    # model code (e.g. MoE dispatch) consults it at trace time.  None ->
+    # call sites fall back to repro.core.costs.get_engine().
+    cost_engine: Optional[Any] = None
     # sequence parallelism: shard the residual stream's seq dim over the
     # model axis between layers (beyond-paper memory optimization — the
     # saved scan carries shrink by the TP degree; attention re-gathers)
@@ -178,6 +182,30 @@ def _spec_for(path: str, arr, *, fsdp, model: str, mesh_shape: Dict[str, int],
     return wrap(*([None] * ndim))
 
 
+def _fit_override(spec: P, arr, mesh_shape: Dict[str, int], scanned: bool) -> P:
+    """Adapt a planner override spec to one parameter.
+
+    Override specs describe the LOGICAL (unscanned) shape; stacked-scan
+    params get a leading None for the layer axis.  Dims whose size does not
+    divide the assigned axis group fall back to replicated (None) — the same
+    feasibility-before-speedup rule ``_spec_for`` applies.
+    """
+    dims = tuple(spec)
+    if scanned:
+        dims = (None,) + dims
+    dims = dims[: arr.ndim] + (None,) * (arr.ndim - len(dims))
+    fitted = []
+    for i, ax in enumerate(dims):
+        if ax is None:
+            fitted.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh_shape.get(a, 1)
+        fitted.append(ax if arr.shape[i] % size == 0 else None)
+    return P(*fitted)
+
+
 def _path_str(path) -> str:
     parts = []
     for p in path:
@@ -201,7 +229,8 @@ def param_shardings(
 ) -> Any:
     """Build a pytree of NamedShardings matching ``params_shape``.
 
-    ``overrides``: path-regex -> spec, applied first (planner hook).
+    ``overrides``: path-regex -> spec, applied first (planner hook).  Specs
+    address the logical (unscanned) shape; see ``_fit_override``.
     ``data_axes=()`` replicates params over the data axes (inference mode:
     no FSDP -> no per-step weight all-gathers; overhead-model decision).
     """
@@ -223,7 +252,8 @@ def param_shardings(
         if overrides:
             for pat, spec in overrides.items():
                 if re.search(pat, ps):
-                    return NamedSharding(mesh, spec)
+                    return NamedSharding(
+                        mesh, _fit_override(spec, arr, mesh_shape, scanned))
         spec = _spec_for(ps, arr, fsdp=fsdp, model=model_axis,
                          mesh_shape=mesh_shape, scanned=scanned)
         return NamedSharding(mesh, spec)

@@ -2,7 +2,11 @@
 and the roofline analysis.
 
 The container runs on CPU; these numbers describe the TARGET hardware
-(TPU v5e) and are used analytically (never to gate a runtime path).
+(TPU v5e) and are used analytically by default.  The CostEngine's
+calibration layer (core/costs/calibration.py) can REPLACE individual fields
+with values microbenchmarked on the running backend; ``to_dict`` /
+``from_dict`` exist so calibrated specs persist to a JSON cache keyed by
+backend fingerprint.
 """
 
 from __future__ import annotations
@@ -33,6 +37,14 @@ class HardwareSpec:
     mxu_dim: int = 128  # systolic array native tile
     lane_dim: int = 128  # VPU lane count
     sublane_dim: int = 8  # f32 sublanes
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HardwareSpec":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
 
 
 V5E = HardwareSpec()

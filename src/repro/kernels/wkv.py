@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, state_ref,
                 *, chunk: int, n_chunks: int):
@@ -87,7 +89,7 @@ def wkv_pallas(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
             jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

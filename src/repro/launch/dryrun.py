@@ -41,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_configs, shape_applicable
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.costs import get_engine
 from repro.core.planner import plan_model
 from repro.data.pipeline import make_batch_specs
 from repro.distributed.sharding import (
@@ -214,8 +215,10 @@ def _score_traffic_per_device(cfg: ModelConfig, kind: str, ctx, b_local: int,
 
 
 def composed_roofline(cfg: ModelConfig, shape: ShapeSpec, mesh, ctx,
-                      label: str) -> Dict[str, Any]:
-    """sum(kind_count x per-layer probe) + head probe -> RooflineTerms."""
+                      label: str, hw=None) -> Dict[str, Any]:
+    """sum(kind_count x per-layer probe) + head probe -> RooflineTerms.
+    ``hw``: HardwareSpec to evaluate against (e.g. a calibrated engine's);
+    defaults to the V5E datasheet spec."""
     b = shape.global_batch
     s = shape.seq_len
     train = shape.kind == "train"
@@ -264,6 +267,8 @@ def composed_roofline(cfg: ModelConfig, shape: ShapeSpec, mesh, ctx,
     # convert per-device -> global by multiplying by chips.
     chips = mesh.size
     # add parameter/optimizer-state traffic (arguments are read each step)
+    from repro.hw import V5E
+
     terms = RooflineTerms(
         flops=flops * chips,
         hbm_bytes=bytes_ * chips,
@@ -271,6 +276,7 @@ def composed_roofline(cfg: ModelConfig, shape: ShapeSpec, mesh, ctx,
         collective_bytes=sum(coll.values()) * chips,
         chips=chips,
         model_flops=model_flops_for(cfg, shape),
+        hw=hw or V5E,
         label=label,
     )
     flash_terms = dataclasses.replace(
@@ -300,9 +306,12 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = data_axes_of(mesh)
-    plan = plan_model(cfg, shape, dict(mesh.shape))
+    engine = get_engine()
+    ledger_mark = len(engine.ledger.entries)
+    plan = plan_model(cfg, shape, dict(mesh.shape), engine=engine)
     ctx = ShardingCtx(mesh=mesh, data_axes=data_axes,
-                      rnn_chunk=plan.rnn_chunk, attn_chunk=plan.attn_chunk)
+                      rnn_chunk=plan.rnn_chunk, attn_chunk=plan.attn_chunk,
+                      cost_engine=engine)
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     batch_specs = make_batch_specs(cfg, shape, dtype_of(cfg.dtype))
@@ -313,7 +322,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             loop = TrainLoopConfig()
             state_shapes = jax.eval_shape(
                 functools.partial(init_train_state, model, loop=loop), key)
-            state_sh = param_shardings(state_shapes, mesh, data_axes=data_axes)
+            state_sh = param_shardings(state_shapes, mesh, data_axes=data_axes,
+                                       overrides=plan.overrides)
             step = make_train_step(model, loop, ctx)
             lowered = jax.jit(
                 step, in_shardings=(state_sh, batch_sh),
@@ -321,7 +331,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             ).lower(state_shapes, batch_specs)
         elif shape.kind == "prefill":
             params_shapes = jax.eval_shape(model.init, key)
-            psh = param_shardings(params_shapes, mesh, data_axes=data_axes)
+            psh = param_shardings(params_shapes, mesh, data_axes=data_axes,
+                                  overrides=plan.overrides)
             prefill_fn = lambda p, b: model.prefill(p, b, ctx)
             lowered = jax.jit(
                 prefill_fn, in_shardings=(psh, batch_sh),
@@ -339,9 +350,12 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             p_bytes_tp_only = cfg.param_count() * 2 / tp
             infer_replicate = p_bytes_tp_only < 0.6 * V5E.hbm_bytes
             ctx = dataclasses.replace(ctx, infer_replicate_params=infer_replicate)
+            # infer_replicate already replicates over the data axes, which
+            # subsumes the planner's replicate-over-model overrides
             psh = param_shardings(
                 params_shapes, mesh,
-                data_axes=(() if infer_replicate else data_axes))
+                data_axes=(() if infer_replicate else data_axes),
+                overrides=(None if infer_replicate else plan.overrides))
             state_shapes = jax.eval_shape(
                 functools.partial(model.init_decode_state, shape.global_batch,
                                   shape.seq_len))
@@ -366,6 +380,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "scanned_cost_analysis": scanned_cost,
             "plan_hbm_per_chip_gb": plan.hbm_per_chip / 1e9,
             "plan_fits_hbm": plan.fits_hbm,
+            "plan_decisions": [dataclasses.asdict(d) for d in plan.decisions],
+            "plan_overrides": {k: str(v) for k, v in plan.overrides.items()},
             "compile_s": time.time() - t0,
         }
         if verbose:
@@ -375,7 +391,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
         if probe:
             t1 = time.time()
-            roof = composed_roofline(cfg, shape, mesh, ctx, label)
+            roof = composed_roofline(cfg, shape, mesh, ctx, label,
+                                     hw=engine.hw)
             record["roofline"] = roof
             record["probe_s"] = time.time() - t1
             if verbose:
@@ -384,6 +401,9 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
                       f"memory={t['t_memory_s']:.3e}s "
                       f"collective={t['t_collective_s']:.3e}s "
                       f"bound={t['bound']} frac={t['roofline_fraction']:.3f}")
+    # every CostEngine decision this cell triggered (plan + trace-time sites)
+    record["cost_ledger"] = [
+        e.as_dict() for e in engine.ledger.entries[ledger_mark:]]
     return record
 
 

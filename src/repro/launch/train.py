@@ -27,6 +27,9 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.costs import get_engine
+from repro.core.planner import plan_model
 from repro.data import SyntheticLMData
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
@@ -50,6 +53,11 @@ def main(argv=None):
     ap.add_argument("--step-timeout", type=float, default=0.0,
                     help="log a straggler warning if a step exceeds this many seconds")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--report-overheads", action="store_true",
+                    help="print the overhead plan up front and the CostEngine "
+                    "ledger (predicted-vs-measured) at exit")
+    ap.add_argument("--ledger-out", default=None,
+                    help="write the CostEngine ledger JSON here at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -63,6 +71,16 @@ def main(argv=None):
         microbatches=args.microbatches,
         compression=args.compression,
     )
+    # overhead plan for the launch shape — same CostEngine (and ledger) the
+    # trace-time decision sites consult; REPRO_CALIBRATE=1 calibrates it
+    # against this backend first
+    engine = get_engine()
+    shape = ShapeSpec("cli_train", args.seq, args.batch, "train")
+    plan = plan_model(cfg, shape, {"data": jax.device_count(), "model": 1},
+                      engine=engine)
+    if args.report_overheads:
+        print(f"overhead plan ({engine.hw.name}):\n{plan.summary()}")
+
     ds = SyntheticLMData(cfg, seq_len=args.seq, global_batch=args.batch)
     state = init_train_state(model, jax.random.PRNGKey(0), loop)
 
@@ -84,6 +102,19 @@ def main(argv=None):
 
     step_fn = jax.jit(make_train_step(model, loop))
     t_start = time.time()
+    try:
+        return _train_loop(args, model, loop, ds, state, step_fn, start,
+                           t_start, interrupted)
+    finally:
+        if args.report_overheads:
+            print("cost ledger:\n" + engine.ledger.table())
+        if args.ledger_out:
+            engine.ledger.to_json(args.ledger_out)
+            print(f"wrote ledger to {args.ledger_out}")
+
+
+def _train_loop(args, model, loop, ds, state, step_fn, start, t_start,
+                interrupted):
     for i in range(start, args.steps):
         t0 = time.time()
         state, metrics = step_fn(state, ds.batch_at(i))

@@ -185,7 +185,7 @@ def moe_ep(
     capacity_factor: float = 2.0,
 ):
     """Expert-parallel MoE over ``mesh``; see module docstring."""
-    from jax import shard_map
+    from repro.compat import shard_map
 
     b, s, d = x.shape
     n_experts = params["router"].shape[1]
@@ -234,8 +234,27 @@ def moe_ep(
 
 
 def moe_apply(params, x, *, top_k: int, activation: str, ctx=None):
-    """Dispatch: EP under a mesh context, dense oracle otherwise."""
+    """Dispatch: EP under a mesh context, dense oracle otherwise.
+
+    The EP collective strategy (replicated-psum vs all-to-all) is a
+    CostEngine decision site: the query lands in the engine's ledger at
+    trace time.  Only the psum path is implemented, so an all-to-all verdict
+    is advisory — the ledger documents the gap instead of hiding it.
+    """
     if ctx is not None and ctx.use_ep and ctx.mesh.shape.get(ctx.model_axis, 1) > 1:
+        from repro.core.costs import get_engine
+
+        b, s, d = x.shape
+        ep = ctx.mesh.shape[ctx.model_axis]
+        engine = getattr(ctx, "cost_engine", None) or get_engine()
+        dec = engine.decide_moe_dispatch(
+            max(b // ctx.dp, 1) * s, d, top_k=top_k, ep_shards=ep,
+            dtype_bytes=x.dtype.itemsize)
+        if dec.choice != "replicated_psum":
+            engine.ledger.record(
+                "moe_dispatch", dec.query.as_dict(), "replicated_psum",
+                dec.baseline, note=f"engine prefers {dec.choice}; psum is the "
+                f"implemented EP path")
         return moe_ep(
             params, x, top_k=top_k, activation=activation, mesh=ctx.mesh,
             data_axes=ctx.data_axes, model_axis=ctx.model_axis,

@@ -6,6 +6,11 @@ Three terms per (arch x shape x mesh), all in seconds:
     memory     = HLO_bytes / (chips x HBM_bw)
     collective = collective_bytes / (chips x link_bw)
 
+``RooflineTerms.hw`` defaults to the V5E datasheet spec; pass a CostEngine's
+(possibly calibrated) ``engine.hw`` to evaluate the same compiled artifacts
+against the hardware the process actually runs on — ``as_dict()`` records
+which spec produced the numbers.
+
 HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  XLA does NOT
 multiply while-loop (lax.scan) bodies by their trip count, so the launcher
 derives costs compositionally from FLAT per-layer probes (launch/dryrun.py)
@@ -172,6 +177,7 @@ class RooflineTerms:
     def as_dict(self) -> dict:
         return {
             "label": self.label,
+            "hw": self.hw.name,
             "chips": self.chips,
             "flops": self.flops,
             "hbm_bytes": self.hbm_bytes,

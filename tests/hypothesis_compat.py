@@ -1,0 +1,72 @@
+"""Use hypothesis when installed; degrade to a deterministic example sweep on
+a bare environment (the tier-1 suite must collect and run without it).
+
+The stand-in implements just the surface this suite uses — ``st.integers``,
+``st.sampled_from``, ``st.floats``, ``st.lists``, ``@given``, ``@settings``
+— by running the test body over a small fixed product of representative
+values instead of randomized search.
+"""
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Samples:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class st:  # noqa: N801 — mimics hypothesis.strategies
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Samples(dict.fromkeys(
+                (min_value, (min_value + max_value) // 2, max_value)))
+
+        @staticmethod
+        def sampled_from(values):
+            return _Samples(values)
+
+        @staticmethod
+        def floats(min_value=-1e6, max_value=1e6, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            cands = (lo, lo + (hi - lo) * 0.25, (lo + hi) / 2.0, hi)
+            return _Samples(dict.fromkeys(c for c in cands if lo <= c <= hi))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            base = list(elements.values) or [0.0]
+
+            def of_size(n):
+                reps = -(-n // len(base))  # ceil
+                return (base * reps)[:n]
+
+            sizes = sorted({max(min_size, 1), (min_size + max_size) // 2,
+                            max_size})
+            return _Samples([of_size(n) for n in sizes
+                             if min_size <= n <= max_size])
+
+    def given(*arg_strategies, **kw_strategies):
+        names = list(kw_strategies)
+        pools = [s.values for s in arg_strategies] + \
+                [kw_strategies[n].values for n in names]
+        combos = list(itertools.product(*pools))
+
+        def deco(fn):
+            def wrapper():
+                for combo in combos:
+                    pos = combo[: len(arg_strategies)]
+                    kw = dict(zip(names, combo[len(arg_strategies):]))
+                    fn(*pos, **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn
