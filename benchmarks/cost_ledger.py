@@ -79,6 +79,32 @@ def run(csv=True):
         distributed_sort(x, engine=engines["calibrated"], measure=True)
         distributed_sort(x, engine=engines["v5e"], measure=True)
 
+    # autotune: how far the analytic tiling prior sits from the measured
+    # optimum.  Ephemeral cache => always measures; the prior/tuned rows land
+    # in the calibrated engine's ledger (predicted = analytic per-config cost)
+    import tempfile
+
+    from repro.core.costs.autotune import Autotuner, fmt_config
+    from repro.kernels import tuning as ktuning
+
+    interpret = jax.default_backend() != "tpu"
+    tuner = Autotuner(cache_dir=tempfile.mkdtemp(prefix="repro-autotune-"),
+                      measure=True, ledger=engines["calibrated"].ledger)
+    tunes = (
+        ktuning.tune_matmul(256, 256, 256, jnp.float32, interpret=interpret,
+                            tuner=tuner),
+        ktuning.tune_flash(8, 256, 256, 64, jnp.float32, causal=True,
+                           interpret=interpret, tuner=tuner),
+    )
+    for res in tunes:
+        sp = res.speedup_vs_prior
+        print(f"cost_ledger,autotune,family={res.family},"
+              f"prior=({fmt_config(res.prior_config)}),"
+              f"tuned=({fmt_config(res.config)}),"
+              f"prior_us={res.prior_measured_s * 1e6:.0f},"
+              f"tuned_us={res.measured_s * 1e6:.0f},"
+              f"tuned_vs_prior={'-' if sp is None else f'{sp:.2f}x'}")
+
     for name, eng in engines.items():
         s = eng.ledger.summary()
         print(f"cost_ledger,engine={name},measured={s['measured']},"

@@ -1,63 +1,158 @@
-"""Per-kernel micro-bench: Pallas kernels in interpret mode (correctness
-cost) vs the pure-XLA oracle on CPU.  These are CPU wall times — interpret
-mode executes the kernel body in Python, so the XLA oracle is faster here;
-the TPU numbers are structural (roofline terms from BlockSpec tiling).
+"""Per-kernel micro-bench + empirical autotune sweep.
+
+Two layers:
+
+  * correctness cost — Pallas kernels in interpret mode vs the pure-XLA
+    oracle on CPU (interpret mode executes the kernel body in Python, so the
+    XLA oracle is faster here; the TPU numbers are structural).
+  * measured block-shape search — every kernel family tuned with the
+    autotuner (measurement ON, cache under results/autotune_cache), the
+    tuned config raced against the static-heuristic default, and a second
+    tuner instance proving the warm cache answers measurement-free.
+
+Writes the machine-readable perf trajectory to ``BENCH_kernels.json``:
+one record per (op, shape) with the default/tuned configs, median times,
+tuned-vs-default speedup and the warm-cache source.
 """
 
+import json
+import statistics
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.hw import V5E
-from repro.kernels import ops, ref
-from repro.kernels.matmul import pick_block_shape
+from repro.core.costs.autotune import Autotuner, fmt_config
+from repro.core.costs.calibration import backend_fingerprint
+from repro.kernels import ops, ref, tuning
+
+BENCH_JSON = "BENCH_kernels.json"
 
 
-def _t(f, *args, reps=2):
+def _t(f, *args, reps=3):
     f(*args).block_until_ready()
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         f(*args).block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def _no_bench(runner, reps):
+    raise AssertionError("warm autotune cache must not measure")
+
+
+def _record(op, shape, res, warm_res):
+    us = lambda s: None if s is None else s * 1e6
+    speedup = res.speedup_vs_prior
+    return {
+        "op": op,
+        "shape": shape,
+        "default_config": res.prior_config,
+        "tuned_config": res.config,
+        "default_median_us": us(res.prior_measured_s),
+        "tuned_median_us": us(res.measured_s),
+        "tuned_vs_default_speedup": speedup,
+        "source": res.source,
+        "warm_source": warm_res.source,
+    }
 
 
 def run(csv=True):
-    rows = []
+    interpret = jax.default_backend() != "tpu"
+    # fresh cache dir per run: every BENCH record is measured THIS run (a
+    # persistent dir would silently re-report stale timings as current)
+    cache_dir = tempfile.mkdtemp(prefix="repro-kernels-bench-")
+    tuner = Autotuner(cache_dir=cache_dir, measure=True)
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    # matmul
+    records = []
+
+    def tune_all(t):
+        return {
+            ("matmul", "128x128x128"):
+                tuning.tune_matmul(128, 128, 128, jnp.float32,
+                                   interpret=interpret, tuner=t),
+            ("matmul", "256x256x256"):
+                tuning.tune_matmul(256, 256, 256, jnp.float32,
+                                   interpret=interpret, tuner=t),
+            ("flash_attention", "8x256x256x64"):
+                tuning.tune_flash(8, 256, 256, 64, jnp.float32, causal=True,
+                                  interpret=interpret, tuner=t),
+            ("sort", "16x1024"):
+                tuning.tune_sort(16, 1024, jnp.float32,
+                                 interpret=interpret, tuner=t),
+            ("wkv", "4x128x8"):
+                tuning.tune_wkv(4, 128, 8, jnp.float32,
+                                interpret=interpret, tuner=t),
+        }
+
+    results = tune_all(tuner)
+    # a fresh tuner over the same cache dir: every answer must come from the
+    # persistent cache without a single measurement
+    warm = Autotuner(cache_dir=cache_dir, measure=True, bench=_no_bench)
+    warm_results = tune_all(warm)
+
+    for (op, shape), res in results.items():
+        wres = warm_results[(op, shape)]
+        records.append(_record(op, shape, res, wres))
+        if csv:
+            sp = res.speedup_vs_prior
+            print(f"kernel_tune,op={op},shape={shape},"
+                  f"default=({fmt_config(res.prior_config)}),"
+                  f"tuned=({fmt_config(res.config)}),"
+                  f"tuned_vs_default="
+                  f"{'-' if sp is None else f'{sp:.2f}x'},"
+                  f"source={res.source},warm={wres.source}")
+
+    warm_ok = all(r["warm_source"] == "cache" for r in records)
+    if csv:
+        print(f"kernel_tune,warm_cache_measurement_free={warm_ok},"
+              f"warm_bench_calls={warm.bench_calls}")
+
+    # interpret-mode Pallas vs XLA oracle (the historical correctness-cost rows)
     for n in (128, 256):
         a = jax.random.normal(k1, (n, n), jnp.float32)
         b = jax.random.normal(k2, (n, n), jnp.float32)
-        t_pallas = _t(lambda a, b: ops.matmul(a, b, interpret=True), a, b)
+        t_pallas = _t(lambda a, b: ops.matmul(a, b, interpret=True,
+                                              tuner=tuner), a, b)
         t_ref = _t(ref.matmul_ref, a, b)
-        bm, bn, bk = pick_block_shape(n, n, n, 4)
-        vmem = (bm * bk + bk * bn + bm * bn) * 4
-        rows.append((f"matmul_{n}", t_pallas, t_ref))
         if csv:
             print(f"kernel_matmul,n={n},pallas_interp={t_pallas:.0f}us,"
-                  f"xla_ref={t_ref:.0f}us,block=({bm},{bn},{bk}),"
-                  f"vmem={vmem/1e6:.1f}MB/{V5E.vmem_bytes/1e6:.0f}MB")
-    # bitonic sort
+                  f"xla_ref={t_ref:.0f}us")
     for n in (1024, 4096):
         x = jax.random.normal(k1, (n,))
-        t_pallas = _t(lambda x: ops.sort(x, interpret=True), x)
+        t_pallas = _t(lambda x: ops.sort(x, interpret=True, tuner=tuner), x)
         t_ref = _t(ref.sort_ref, x)
-        rows.append((f"sort_{n}", t_pallas, t_ref))
         if csv:
-            print(f"kernel_sort,n={n},pallas_interp={t_pallas:.0f}us,xla_ref={t_ref:.0f}us")
-    # flash attention
+            print(f"kernel_sort,n={n},pallas_interp={t_pallas:.0f}us,"
+                  f"xla_ref={t_ref:.0f}us")
     q = jax.random.normal(k1, (2, 256, 4, 64))
     kk = jax.random.normal(k2, (2, 256, 2, 64))
     vv = jax.random.normal(k2, (2, 256, 2, 64))
-    t_pallas = _t(lambda q, k, v: ops.flash_attention(q, k, v, interpret=True), q, kk, vv)
+    t_pallas = _t(lambda q, k, v: ops.flash_attention(
+        q, k, v, interpret=True, tuner=tuner), q, kk, vv)
     from repro.models.attention import dense_attention
 
     t_ref = _t(lambda q, k, v: dense_attention(q, k, v, causal=True), q, kk, vv)
-    rows.append(("flash_256", t_pallas, t_ref))
     if csv:
-        print(f"kernel_flash,s=256,pallas_interp={t_pallas:.0f}us,xla_ref={t_ref:.0f}us")
-    return rows
+        print(f"kernel_flash,s=256,pallas_interp={t_pallas:.0f}us,"
+              f"xla_ref={t_ref:.0f}us")
+
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "fingerprint": backend_fingerprint(),
+        "interpret": interpret,
+        "warm_cache_measurement_free": warm_ok,
+        "records": records,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    if csv:
+        print(f"kernel_tune,wrote={BENCH_JSON}")
+    return records
 
 
 if __name__ == "__main__":

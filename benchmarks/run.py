@@ -3,10 +3,14 @@
   matmul_crossover — paper Fig. 2 (serial/parallel crossover over order)
   sort_pivots      — paper Table 3 (pivot strategies; imbalance on 8 devices)
   wkv_chunk        — fork-join chunk sweep for the RWKV6 recurrence
-  kernels_bench    — Pallas kernels (interpret) vs XLA oracles
+  kernels_bench    — Pallas kernels (interpret) vs XLA oracles + the
+                     autotuner's measured block-shape search (tuned vs
+                     static-default configs, warm-cache proof); writes the
+                     machine-readable perf trajectory BENCH_kernels.json
   roofline_table   — renders §Roofline from results/dryrun_*.json (if present)
   cost_ledger      — CostEngine predicted-vs-measured ledger, v5e datasheet
                      vs backend-calibrated constants (decision flips + table)
+                     + autotune prior-vs-measured-optimum deltas
 
 Prints ``name,key=value,...`` CSV lines.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME]

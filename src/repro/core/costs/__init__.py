@@ -6,8 +6,19 @@ calibration.py — microbenchmark the running backend -> calibrated HardwareSpec
 engine.py      — CostEngine: uniform CostQuery -> Decision interface with a
                  decision cache; process-wide default via get_engine()
 ledger.py      — predicted-vs-measured overhead ledger (JSON export + table)
+autotune.py    — empirical kernel autotuner: measured block-shape search with
+                 the analytic model as prior, fingerprint-keyed cache
+                 (kernel families live in kernels/tuning.py; DESIGN.md §4)
 """
 
+from repro.core.costs.autotune import (  # noqa: F401
+    Autotuner,
+    Candidate,
+    TuneResult,
+    TuneSpec,
+    get_tuner,
+    set_tuner,
+)
 from repro.core.costs.calibration import (  # noqa: F401
     CalibrationResult,
     backend_fingerprint,

@@ -1,0 +1,315 @@
+"""Empirical kernel autotuner: measured block-shape search with the analytic
+model as the zero-measurement prior.
+
+The paper's program parameters — granularity, level of parallelism, resource
+sharing — must be *determined*, not assumed (Haque, Moreno Maza, Xie 2014):
+a tile size frozen at authoring time surfaces later as memory-hierarchy and
+launch overhead.  PR 1 closed the loop for *whether* to fork (the CostEngine
+ledger); this layer closes it for *how* each kernel tiles.
+
+Pipeline (DESIGN.md §4):
+
+    prior      — the analytic model proposes a config without measuring
+                 (kernels/tuning.py builds the candidate space per family)
+    pruning    — candidates are MXU-aligned, divisor-valid and VMEM-budget-
+                 filtered before anything runs, ordered by analytic cost
+    measure    — each surviving candidate is timed on the RUNNING backend
+                 (interpret-mode Pallas on CPU; compiled on TPU), median of
+                 ``reps`` after a warmup/compile call
+    cache      — winners persist to a JSON cache keyed by the same backend
+                 fingerprint the calibration layer uses, so a tuned config
+                 survives across processes and invalidates when the backend
+                 changes
+
+Measurement never runs implicitly: the default tuner measures only when
+``REPRO_AUTOTUNE=1`` (mirroring ``REPRO_CALIBRATE``); otherwise it returns
+the prior, which reproduces the pre-tuner static heuristics exactly.  Every
+measured tuning decision lands in the overhead ledger twice — the prior
+config and the tuned config, each with its analytic prediction and measured
+seconds — so ``benchmarks/cost_ledger.py`` can report how far the analytic
+model sat from the measured optimum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+from repro.core.costs.calibration import backend_fingerprint, default_cache_dir
+from repro.core.costs.ledger import OverheadLedger
+from repro.core.costs.model import CostBreakdown
+
+_SCHEMA_VERSION = 1
+_MEASURE_ENV = "REPRO_AUTOTUNE"
+
+Config = Dict[str, int]
+
+
+def fmt_config(config: Mapping[str, Any]) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(config.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of a kernel family's pruned search space."""
+
+    config: Config
+    prior_s: float  # analytic predicted seconds for this config
+    vmem_bytes: int  # working-set estimate the VMEM filter already admitted
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpec:
+    """A tuning problem: family + cache key + pruned candidates + runner.
+
+    ``prior`` is the zero-measurement choice (the demoted static heuristic);
+    it must appear in ``candidates``.  ``make_runner(config)`` returns a
+    zero-arg callable that executes the kernel once with that config and
+    blocks until ready; ``None`` means the family cannot be measured (the
+    tuner then always answers with the prior).
+    """
+
+    family: str
+    key: str
+    prior: Config
+    candidates: Tuple[Candidate, ...]
+    make_runner: Optional[Callable[[Config], Callable[[], Any]]] = None
+    query: Tuple[Tuple[str, Any], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    key: str
+    family: str
+    config: Config
+    source: str  # "cache" | "measured" | "prior"
+    measured_s: Optional[float]
+    prior_config: Config
+    prior_predicted_s: Optional[float]
+    prior_measured_s: Optional[float]
+    trials: Tuple[dict, ...] = ()
+
+    @property
+    def speedup_vs_prior(self) -> Optional[float]:
+        """Measured prior time over measured tuned time (>= 1.0: tuning paid;
+        == 1.0: the prior already was the optimum — a zero delta)."""
+        if self.prior_measured_s is None or not self.measured_s:
+            return None
+        return self.prior_measured_s / self.measured_s
+
+
+class Autotuner:
+    """Measured block-shape search with a fingerprint-keyed persistent cache.
+
+    ``measure=None`` defers to ``REPRO_AUTOTUNE=1`` (default: prior-only, so
+    importing code paths never pay measurement cost).  ``bench`` overrides
+    the timing hook (tests inject deterministic costs); it receives
+    ``(runner, reps)`` and returns seconds.  ``ledger=None`` records into
+    the process-default CostEngine's ledger.
+    """
+
+    def __init__(self, *, cache_dir: Optional[Path] = None,
+                 measure: Optional[bool] = None, reps: int = 3,
+                 max_trials: int = 8,
+                 ledger: Optional[OverheadLedger] = None,
+                 fingerprint: Optional[str] = None,
+                 bench: Optional[Callable[[Callable[[], Any], int], float]] = None):
+        if measure is None:
+            measure = os.environ.get(_MEASURE_ENV) == "1"
+        self.measure = measure
+        self.reps = reps
+        self.max_trials = max_trials
+        self.ledger = ledger
+        self.cache_dir = Path(cache_dir) if cache_dir is not None else default_cache_dir()
+        self._fingerprint = fingerprint
+        self._bench = bench or self._default_bench
+        self.bench_calls = 0
+        self._memo: Dict[str, TuneResult] = {}
+        self._store: Optional[Dict[str, dict]] = None
+
+    # ------------------------------------------------------------------
+    # Persistence
+    # ------------------------------------------------------------------
+
+    @property
+    def fingerprint(self) -> str:
+        if self._fingerprint is None:
+            self._fingerprint = backend_fingerprint()
+        return self._fingerprint
+
+    @property
+    def cache_path(self) -> Path:
+        return self.cache_dir / f"autotune-{self.fingerprint}.json"
+
+    def _load_store(self) -> Dict[str, dict]:
+        if self._store is None:
+            self._store = {}
+            try:
+                payload = json.loads(self.cache_path.read_text())
+            except (OSError, ValueError):
+                return self._store
+            if (payload.get("schema") == _SCHEMA_VERSION
+                    and payload.get("fingerprint") == self.fingerprint):
+                self._store = dict(payload.get("entries", {}))
+        return self._store
+
+    def _save_store(self) -> None:
+        payload = {
+            "schema": _SCHEMA_VERSION,
+            "fingerprint": self.fingerprint,
+            "entries": self._load_store(),
+        }
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        tmp = self.cache_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=1))
+        tmp.replace(self.cache_path)
+
+    # ------------------------------------------------------------------
+    # Tuning
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _default_bench(runner: Callable[[], Any], reps: int) -> float:
+        runner()  # warmup / compile
+        times = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            runner()
+            times.append(time.perf_counter() - t0)
+        return statistics.median(times)
+
+    def peek(self, key: str) -> Optional[TuneResult]:
+        """Memoized result for ``key``, if any — lets hot call sites skip
+        candidate-space construction entirely on repeat lookups."""
+        return self._memo.get(key)
+
+    def tune(self, spec: TuneSpec) -> TuneResult:
+        """Resolve a config: in-memory memo -> persistent cache -> measured
+        search -> analytic prior (in that order of preference)."""
+        memo = self._memo.get(spec.key)
+        if memo is not None:
+            return memo
+        result = self._from_cache(spec)
+        if result is None:
+            if self.measure and spec.make_runner is not None and spec.candidates:
+                result = self._measure(spec)
+            else:
+                result = self._prior_result(spec)
+        self._memo[spec.key] = result
+        return result
+
+    def _prior_result(self, spec: TuneSpec) -> TuneResult:
+        prior_s = next((c.prior_s for c in spec.candidates
+                        if c.config == spec.prior), None)
+        return TuneResult(spec.key, spec.family, dict(spec.prior), "prior",
+                          None, dict(spec.prior), prior_s, None)
+
+    def _from_cache(self, spec: TuneSpec) -> Optional[TuneResult]:
+        rec = self._load_store().get(spec.key)
+        if rec is None:
+            return None
+        config = rec.get("config")
+        # defensive: a cached config must still be a member of the (possibly
+        # re-pruned) candidate space for this exact problem
+        if not any(c.config == config for c in spec.candidates):
+            return None
+        return TuneResult(
+            spec.key, spec.family, dict(config), "cache",
+            rec.get("measured_s"), dict(rec.get("prior_config") or spec.prior),
+            rec.get("prior_predicted_s"), rec.get("prior_measured_s"))
+
+    def _measure(self, spec: TuneSpec) -> TuneResult:
+        ranked = sorted(spec.candidates, key=lambda c: c.prior_s)
+        trials_cands = list(ranked[: self.max_trials])
+        if not any(c.config == spec.prior for c in trials_cands):
+            prior_cand = next((c for c in spec.candidates
+                               if c.config == spec.prior), None)
+            if prior_cand is not None:
+                trials_cands.append(prior_cand)
+
+        trials = []
+        for cand in trials_cands:
+            try:
+                runner = spec.make_runner(cand.config)
+                seconds = self._bench(runner, self.reps)
+                self.bench_calls += 1
+            except Exception as exc:  # a candidate that fails is just skipped
+                trials.append({"config": dict(cand.config), "seconds": None,
+                               "prior_s": cand.prior_s, "error": repr(exc)})
+                continue
+            trials.append({"config": dict(cand.config), "seconds": seconds,
+                           "prior_s": cand.prior_s})
+
+        ok = [t for t in trials if t["seconds"] is not None
+              and math.isfinite(t["seconds"])]
+        if not ok:
+            return self._prior_result(spec)
+        best = min(ok, key=lambda t: t["seconds"])
+        prior_trial = next((t for t in ok if t["config"] == spec.prior), None)
+        result = TuneResult(
+            spec.key, spec.family, dict(best["config"]), "measured",
+            best["seconds"], dict(spec.prior),
+            prior_trial["prior_s"] if prior_trial else None,
+            prior_trial["seconds"] if prior_trial else None,
+            tuple(trials))
+        store = self._load_store()
+        store[spec.key] = {
+            "config": result.config,
+            "measured_s": result.measured_s,
+            "prior_config": result.prior_config,
+            "prior_predicted_s": result.prior_predicted_s,
+            "prior_measured_s": result.prior_measured_s,
+        }
+        self._save_store()
+        self._record_ledger(spec, result, best, prior_trial)
+        return result
+
+    def _record_ledger(self, spec: TuneSpec, result: TuneResult, best: dict,
+                       prior_trial: Optional[dict]) -> None:
+        """Two ledger rows per measured tuning: the analytic prior and the
+        tuned winner, each predicted-vs-measured — the delta between them is
+        how far the analytic model sat from the measured optimum."""
+        ledger = self.ledger
+        if ledger is None:
+            from repro.core.costs.engine import get_engine
+
+            ledger = get_engine().ledger
+        query = {"family": spec.family, **dict(spec.query)}
+        rows = [("prior", prior_trial)] if prior_trial else []
+        rows.append(("tuned", best))
+        for note, trial in rows:
+            entry = ledger.record(
+                "autotune", query, fmt_config(trial["config"]),
+                CostBreakdown(fmt_config(trial["config"]),
+                              trial["prior_s"], 0.0, 0.0, 0.0),
+                note=note)
+            ledger.attach_measurement(entry, trial["seconds"])
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default tuner (mirrors costs/engine.get_engine)
+# ---------------------------------------------------------------------------
+
+_default_tuner: Optional[Autotuner] = None
+
+
+def get_tuner() -> Autotuner:
+    """Shared default tuner: one memo + one persistent cache per process.
+    Measures only when ``REPRO_AUTOTUNE=1``; otherwise serves cached winners
+    or the analytic prior."""
+    global _default_tuner
+    if _default_tuner is None:
+        _default_tuner = Autotuner()
+    return _default_tuner
+
+
+def set_tuner(tuner: Optional[Autotuner]) -> None:
+    """Replace (or, with None, reset) the process-wide default tuner."""
+    global _default_tuner
+    _default_tuner = tuner

@@ -75,6 +75,8 @@ def adaptive_matmul(
     force_strategy: Optional[str] = None,
     engine: Optional[CostEngine] = None,
     io_at_master: bool = True,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ):
     """C = A @ B with overhead-managed serial/parallel dispatch.
 
@@ -87,6 +89,9 @@ def adaptive_matmul(
     (``matmul_chain`` intermediates, layer code) must pass False: for them
     the "input management" overhead row does not exist, which moves the
     serial/parallel crossover all the way down.
+    ``use_kernel=True`` executes the single-chip path through the Pallas
+    matmul with autotuner-resolved block shapes instead of the XLA dot, so
+    the tiling decision is also a managed, measured one.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -98,7 +103,12 @@ def adaptive_matmul(
     strategy = force_strategy or report.chosen.strategy
 
     if strategy == "serial" or mesh is None or chips == 1:
-        out = a @ b
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.matmul(a, b, interpret=interpret)
+        else:
+            out = a @ b
         return (out, report) if return_report else out
 
     if strategy == "shard_m":

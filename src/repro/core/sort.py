@@ -93,6 +93,7 @@ def distributed_sort(
     force_parallel: bool = False,
     engine: Optional[CostEngine] = None,
     measure: bool = False,
+    local_sort: str = "xla",
 ) -> Tuple[jax.Array, SortReport]:
     """Sort a 1D array with overhead-managed serial/parallel dispatch.
 
@@ -101,6 +102,9 @@ def distributed_sort(
     serial/parallel switch consults the CostEngine; ``measure=True``
     additionally times the executed path (synchronously) and attaches the
     wall time to the engine's ledger entry — the predicted-vs-measured hook.
+    ``local_sort="pallas"`` runs the single-chip path through the bitonic
+    network kernel with an autotuner-resolved (VMEM-filtered) row block
+    instead of the XLA sort.
     """
     eng = resolve_engine(engine, model)
     n = x.shape[0]
@@ -110,7 +114,12 @@ def distributed_sort(
     parallel = force_parallel or decision.choice != "serial"
     t0 = time.perf_counter() if measure else 0.0
     if not parallel or chips == 1 or mesh is None:
-        out = jnp.sort(x)
+        if local_sort == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.sort(x)
+        else:
+            out = jnp.sort(x)
         if measure:
             out.block_until_ready()
             eng.record_measured(decision, time.perf_counter() - t0)

@@ -25,6 +25,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 
 
+def sort_working_set_bytes(block_rows: int, n: int, dtype_bytes: int) -> int:
+    """Per-grid-step VMEM residency: input block, output block, and one
+    live compare-exchange intermediate (the tuner's VMEM-filter estimate)."""
+    return 3 * block_rows * n * dtype_bytes
+
+
 def _compare_exchange(x: jax.Array, k: int, j: int) -> jax.Array:
     """One bitonic stage on rows of x (rows, n): partner = i ^ j, direction
     ascending iff (i & k) == 0."""
@@ -60,7 +66,8 @@ def bitonic_sort_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Sort each row of x (rows, n) ascending; n must be a power of 2
-    (ops.py pads with +inf and strips)."""
+    (ops.py pads with +inf and strips).  ``block_rows`` comes from the
+    autotuner (kernels/tuning.py), which VMEM-filters the candidates."""
     rows, n = x.shape
     assert n & (n - 1) == 0, f"n={n} must be a power of 2"
     assert rows % block_rows == 0

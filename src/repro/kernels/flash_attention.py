@@ -22,9 +22,19 @@ from repro.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
+def flash_working_set_bytes(block_q: int, block_kv: int, hd: int,
+                            dtype_bytes: int) -> int:
+    """Per-grid-step VMEM residency: q/k/v/out blocks plus the (m, l, acc)
+    fp32 online-softmax scratch (the tuner's VMEM-filter estimate)."""
+    io = (block_q * hd * 2 + block_kv * hd * 2) * dtype_bytes
+    scratch = (block_q * 128 * 2 + block_q * hd) * 4
+    scores = block_q * block_kv * 4  # the (bq, bkv) logits intermediate
+    return io + scratch + scores
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   kv_steps: int, block_q: int, block_kv: int, causal: bool,
-                  sm_scale: float):
+                  sm_scale: float, kv_len: Optional[int]):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -45,10 +55,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         k = k_ref[0].astype(jnp.float32)  # (bkv, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
-        if causal:
+        if causal or kv_len is not None:
             rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             cols = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(cols <= rows, s, NEG_INF)
+            valid = jnp.ones(s.shape, bool)
+            if causal:
+                valid &= cols <= rows
+            if kv_len is not None:
+                # KV padded to the block multiple: padded columns must not
+                # contribute exp(0) mass to the softmax denominator
+                valid &= cols < kv_len
+            s = jnp.where(valid, s, NEG_INF)
         m_prev = m_ref[...][:, :1]  # (bq, 1)
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -75,18 +92,24 @@ def flash_attention_pallas(
     block_q: int = 128,
     block_kv: int = 128,
     sm_scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Heads folded into the leading dim (GQA handled by the ops.py wrapper)."""
+    """Heads folded into the leading dim (GQA handled by the ops.py wrapper).
+    ``block_q``/``block_kv`` come from the autotuner via ops.py unless the
+    caller pins them.  ``kv_len`` is the true (pre-padding) KV length: columns
+    at or beyond it are masked out of the softmax."""
     bh, s, hd = q.shape
     skv = k.shape[1]
     assert s % block_q == 0 and skv % block_kv == 0, (s, skv, block_q, block_kv)
     sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
     kv_steps = skv // block_kv
+    if kv_len is not None and kv_len >= skv:
+        kv_len = None  # no padded columns: skip the mask
 
     kern = functools.partial(
         _flash_kernel, kv_steps=kv_steps, block_q=block_q, block_kv=block_kv,
-        causal=causal, sm_scale=sm_scale,
+        causal=causal, sm_scale=sm_scale, kv_len=kv_len,
     )
     return pl.pallas_call(
         kern,

@@ -12,6 +12,19 @@ def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     return out.astype(out_dtype or a.dtype)
 
 
+def matmul_fused_ref(a: jax.Array, b: jax.Array, bias=None,
+                     activation=None, out_dtype=None) -> jax.Array:
+    """Matmul + epilogue (bias add, activation, cast) as separate XLA ops in
+    fp32 — the oracle for the kernel's fused epilogue."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation is not None:
+        out = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+               "silu": jax.nn.silu, "tanh": jnp.tanh}[activation](out)
+    return out.astype(out_dtype or a.dtype)
+
+
 def sort_ref(x: jax.Array) -> jax.Array:
     """Row-wise ascending sort."""
     return jnp.sort(x, axis=-1)

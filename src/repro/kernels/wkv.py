@@ -24,6 +24,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 
 
+def wkv_working_set_bytes(chunk: int, n: int, dtype_bytes: int) -> int:
+    """Per-grid-step VMEM residency: r/k/v/logw blocks, the (L, L, N)
+    pairwise decay tensor (the dominant term), the (L, L) score matrix, the
+    carried (N, N) state, and the fp32 out block."""
+    blocks = 4 * chunk * n * dtype_bytes
+    pairwise = chunk * chunk * n * 4
+    scores = 2 * chunk * chunk * 4
+    state = n * n * 4
+    out = chunk * n * 4
+    return blocks + pairwise + scores + state + out
+
+
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, state_ref,
                 *, chunk: int, n_chunks: int):
     j = pl.program_id(1)

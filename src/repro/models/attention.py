@@ -223,9 +223,26 @@ def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
 # ---------------------------------------------------------------------------
 
 
+def flash_attention(
+    q, k, v, *, causal=True, block_q: Optional[int] = None,
+    block_kv: Optional[int] = None, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Pallas flash-kernel path with tuned tiling.
+
+    Unpinned ``block_q``/``block_kv`` resolve through the kernel autotuner
+    (kernels/tuning.py) instead of the kernel's historical hardcoded
+    128/128 — the model path sees tuned attention shapes."""
+    from repro.kernels import ops
+
+    return ops.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)
+
+
 def attention(
     q, k, v, *, causal=True, window=0, chunk=1024, force_dense: bool = False,
-    unroll: bool = False,
+    unroll: bool = False, impl: str = "auto",
+    block_q: Optional[int] = None, block_kv: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Route to the cheapest exact implementation for the shapes at hand.
 
@@ -234,7 +251,18 @@ def attention(
     it, the chunked path is required for memory.  See core/overhead.py for
     the analytic crossover; the static rule here (S <= 2*chunk) matches it
     for all assigned shapes.
+
+    ``impl="flash"`` forces the Pallas kernel path, threading tuned (or
+    explicitly pinned) ``block_q``/``block_kv`` through to the kernel.
     """
+    if impl not in ("auto", "flash"):
+        raise ValueError(f"impl must be 'auto' or 'flash', got {impl!r}")
+    if impl == "flash":
+        if window:
+            raise ValueError("impl='flash' does not support sliding windows; "
+                             "use the local_attention path")
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)
     s = q.shape[1]
     if window and not force_dense and s > 2 * window:
         return local_attention(q, k, v, window=window)

@@ -148,9 +148,16 @@ def _group_norm(x, scale, n_heads, eps=1e-5):
     return (xh.reshape(b, s, d) * scale).astype(x.dtype)
 
 
-def rwkv_time_mix(params, x, head_dim: int, state=None, chunk: int = 64,
-                  unroll: bool = False):
-    """x: (B,S,D).  state (decode): {"S": (B,H,N,N), "shift": (B,1,D)}."""
+def rwkv_time_mix(params, x, head_dim: int, state=None,
+                  chunk: Optional[int] = 64, unroll: bool = False,
+                  backend: str = "xla"):
+    """x: (B,S,D).  state (decode): {"S": (B,H,N,N), "shift": (B,1,D)}.
+
+    ``backend="pallas"`` routes the prefill WKV through the fused kernel
+    (kernels/ops.wkv); ``chunk=None`` then resolves the chunk length through
+    the kernel autotuner instead of the static 64 (decode steps and carried
+    initial states always use the XLA path, which the kernel cannot seed).
+    """
     b, s, d = x.shape
     h = d // head_dim
     last = state["shift"] if state is not None else None
@@ -177,10 +184,15 @@ def rwkv_time_mix(params, x, head_dim: int, state=None, chunk: int = 64,
         new_state = {"S": S_new, "shift": x[:, -1:]}
     else:
         S_in = state["S"] if state is not None else None
-        o, S_new = wkv_chunked(
-            r.transpose(0, 1, 2, 3), k, v, logw, params["bonus_u"], S_in,
-            chunk=chunk, unroll=unroll,
-        )
+        if backend == "pallas" and S_in is None:
+            from repro.kernels import ops
+
+            o, S_new = ops.wkv(r, k, v, logw, params["bonus_u"], chunk=chunk)
+        else:
+            o, S_new = wkv_chunked(
+                r, k, v, logw, params["bonus_u"], S_in,
+                chunk=chunk or 64, unroll=unroll,
+            )
         new_state = {"S": S_new, "shift": x[:, -1:]} if state is not None else None
 
     o = o.reshape(b, s, d)

@@ -1,0 +1,361 @@
+"""Autotuner tests: cache round-trip (hit/miss/invalidate), prior-only path,
+candidate-space pruning (divisor + VMEM filters), ledger recording, fused
+matmul epilogue correctness, and the tuned-shape threading through the model
+call sites."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costs.autotune import (
+    Autotuner,
+    Candidate,
+    TuneSpec,
+    fmt_config,
+    get_tuner,
+)
+from repro.core.costs.ledger import OverheadLedger
+from repro.kernels import ops, ref, tuning
+
+FAKE_TIMES = {1: 3e-4, 2: 2e-4, 4: 1e-4}
+
+
+def _fake_spec(key="fam/k1", prior_b=1):
+    cands = tuple(Candidate({"b": b}, prior_s=t, vmem_bytes=0)
+                  for b, t in FAKE_TIMES.items())
+    return TuneSpec("fam", key, {"b": prior_b}, cands,
+                    make_runner=lambda cfg: (lambda: cfg),
+                    query=(("shape", "k1"),))
+
+
+def _fake_bench(runner, reps):
+    return FAKE_TIMES[runner()["b"]]
+
+
+def _boom_bench(runner, reps):
+    raise AssertionError("bench must not run")
+
+
+# ---------------------------------------------------------------------------
+# Cache round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_measured_tune_picks_fastest_and_persists(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=_fake_bench)
+    res = t.tune(_fake_spec())
+    assert res.source == "measured"
+    assert res.config == {"b": 4}  # fastest fake time
+    assert res.measured_s == FAKE_TIMES[4]
+    assert res.prior_config == {"b": 1}
+    assert res.prior_measured_s == FAKE_TIMES[1]
+    assert res.speedup_vs_prior == pytest.approx(3.0)
+    payload = json.loads((tmp_path / "autotune-fp-a.json").read_text())
+    assert payload["fingerprint"] == "fp-a"
+    assert payload["entries"]["fam/k1"]["config"] == {"b": 4}
+
+
+def test_warm_cache_is_measurement_free(tmp_path):
+    Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+              bench=_fake_bench).tune(_fake_spec())
+    warm = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                     bench=_boom_bench)
+    res = warm.tune(_fake_spec())
+    assert res.source == "cache"
+    assert res.config == {"b": 4}
+    assert res.speedup_vs_prior == pytest.approx(3.0)
+    assert warm.bench_calls == 0
+
+
+def test_cache_misses_on_new_key_and_invalidates_on_fingerprint(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=_fake_bench)
+    t.tune(_fake_spec())
+    # same dir, different key -> miss (prior-only tuner falls back to prior)
+    other = Autotuner(cache_dir=tmp_path, measure=False, fingerprint="fp-a",
+                      bench=_boom_bench)
+    assert other.tune(_fake_spec(key="fam/k2")).source == "prior"
+    # same key, different backend fingerprint -> cache invalid
+    moved = Autotuner(cache_dir=tmp_path, measure=False, fingerprint="fp-b",
+                      bench=_boom_bench)
+    assert moved.tune(_fake_spec()).source == "prior"
+
+
+def test_cached_config_outside_candidate_space_is_rejected(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=_fake_bench)
+    t.tune(_fake_spec())
+    # shrink the candidate space so the cached winner is no longer valid
+    spec = _fake_spec()
+    shrunk = TuneSpec(spec.family, spec.key, {"b": 1}, spec.candidates[:2],
+                      make_runner=spec.make_runner)
+    res = Autotuner(cache_dir=tmp_path, measure=False, fingerprint="fp-a",
+                    bench=_boom_bench).tune(shrunk)
+    assert res.source == "prior"
+    assert res.config == {"b": 1}
+
+
+def test_memoized_second_call_does_not_rebench(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=_fake_bench)
+    t.tune(_fake_spec())
+    calls = t.bench_calls
+    assert t.tune(_fake_spec()).source == "measured"
+    assert t.bench_calls == calls
+
+
+# ---------------------------------------------------------------------------
+# Prior-only path (measurement disabled — the tier-1 default)
+# ---------------------------------------------------------------------------
+
+
+def test_prior_only_never_measures_or_persists(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=False, fingerprint="fp-a",
+                  bench=_boom_bench)
+    res = t.tune(_fake_spec(prior_b=2))
+    assert res.source == "prior"
+    assert res.config == {"b": 2}
+    assert res.measured_s is None
+    assert not (tmp_path / "autotune-fp-a.json").exists()
+
+
+def test_failing_candidates_fall_back_to_prior(tmp_path):
+    def broken_bench(runner, reps):
+        raise RuntimeError("backend exploded")
+
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=broken_bench)
+    res = t.tune(_fake_spec())
+    assert res.source == "prior"
+    assert res.config == {"b": 1}
+
+
+def test_measured_tune_records_prior_and_tuned_ledger_rows(tmp_path):
+    ledger = OverheadLedger()
+    t = Autotuner(cache_dir=tmp_path, measure=True, fingerprint="fp-a",
+                  bench=_fake_bench, ledger=ledger)
+    t.tune(_fake_spec())
+    assert [e.note for e in ledger.entries] == ["prior", "tuned"]
+    assert all(e.site == "autotune" for e in ledger.entries)
+    assert all(e.measured_s is not None for e in ledger.entries)
+    prior, tuned = ledger.entries
+    assert tuned.measured_s <= prior.measured_s
+
+
+def test_default_tuner_is_prior_only(monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    assert Autotuner().measure is False
+    assert isinstance(get_tuner(), Autotuner)
+
+
+# ---------------------------------------------------------------------------
+# Candidate spaces: divisor + VMEM filters
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_candidates_divide_dims_and_fit_vmem():
+    budget = tuning.vmem_budget()
+    for m, n, k in [(128, 128, 128), (640, 640, 128), (8192, 8192, 8192)]:
+        prior, cands = tuning.matmul_candidates(m, n, k, 4)
+        assert cands
+        for c in cands:
+            assert m % c.config["bm"] == 0
+            assert n % c.config["bn"] == 0
+            assert k % c.config["bk"] == 0
+            assert c.vmem_bytes <= budget
+        assert any(c.config == prior for c in cands)
+
+
+def test_matmul_default_path_handles_non_divisor_heuristic(rng):
+    # m=640: pick_block_shape proposes bm=512 which does not divide 640; the
+    # tuner's divisor filter must fall back to a valid config
+    a = jax.random.normal(rng, (640, 128), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (128, 256), jnp.float32)
+    out = ops.matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_sort_block_rows_respects_vmem_budget():
+    budget = tuning.vmem_budget()
+    big_n = 1 << 22  # 4M fp32 elements/row: 8 rows would be 384 MB resident
+    prior, cands = tuning.sort_candidates(8, big_n, 4)
+    from repro.kernels.bitonic_sort import sort_working_set_bytes
+
+    assert sort_working_set_bytes(8, big_n, 4) > budget  # old loop's choice
+    assert prior["block_rows"] < 8
+    assert sort_working_set_bytes(prior["block_rows"], big_n, 4) <= budget
+    # and the small-n prior matches the historical loop exactly
+    small_prior, _ = tuning.sort_candidates(16, 1024, 4)
+    assert small_prior == {"block_rows": 8}
+
+
+def test_flash_and_wkv_priors_match_historical_defaults():
+    fp, fcands = tuning.flash_candidates(8, 256, 256, 64, 4, causal=True)
+    assert fp == {"block_q": 128, "block_kv": 128}
+    assert all(c.vmem_bytes <= tuning.vmem_budget() for c in fcands)
+    wp, wcands = tuning.wkv_candidates(4, 128, 8, 4)
+    assert wp == {"chunk": 64}
+    assert all(c.config["chunk"] <= 128 for c in wcands)
+
+
+def test_fmt_config_is_stable():
+    assert fmt_config({"bn": 2, "bm": 1}) == "bm=1,bn=2"
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul epilogue vs ref.py
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu"])
+def test_fused_epilogue_matches_ref(rng, activation):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    a = jax.random.normal(k1, (100, 60), jnp.float32)
+    b = jax.random.normal(k2, (60, 72), jnp.float32)
+    bias = jax.random.normal(k3, (72,), jnp.float32)
+    out = ops.matmul(a, b, bias=bias, activation=activation, interpret=True)
+    expect = ref.matmul_fused_ref(a, b, bias=bias, activation=activation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_epilogue_out_dtype_cast(rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    a = jax.random.normal(k1, (128, 128), jnp.float32)
+    b = jax.random.normal(k2, (128, 128), jnp.float32)
+    bias = jax.random.normal(k3, (128,), jnp.float32)
+    out = ops.matmul(a, b, bias=bias, activation="gelu",
+                     out_dtype=jnp.bfloat16, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    expect = ref.matmul_fused_ref(a, b, bias=bias, activation="gelu",
+                                  out_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_fused_epilogue_multi_k_step(rng):
+    """Epilogue must run once, after the LAST K step's accumulation."""
+    a = jax.random.normal(rng, (128, 512), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (512, 128), jnp.float32)
+    bias = jnp.full((128,), 0.5, jnp.float32)
+    out = ops.matmul(a, b, bias=bias, activation="relu",
+                     block_shape=(128, 128, 128), interpret=True)
+    expect = ref.matmul_fused_ref(a, b, bias=bias, activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_unknown_activation_rejected(rng):
+    a = jnp.ones((128, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.matmul(a, a, activation="softmax", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Padding/masking regressions surfaced by the tuner routing
+# ---------------------------------------------------------------------------
+
+
+def test_flash_non_causal_padded_kv_is_masked(rng):
+    """KV zero-padded to the block multiple must not leak exp(0) mass into
+    the softmax denominator (non-causal has no causal mask to hide it)."""
+    from repro.models.attention import dense_attention
+
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 192, 2, 32))
+    k = jax.random.normal(ks[1], (1, 192, 2, 32))
+    v = jax.random.normal(ks[2], (1, 192, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=128,
+                              block_kv=128, interpret=True)
+    expect = dense_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_sort_integer_dtype(rng):
+    x = jax.random.randint(rng, (100,), -1000, 1000, dtype=jnp.int32)
+    out = ops.sort(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+def test_attention_unknown_impl_rejected(rng):
+    from repro.models.attention import attention
+
+    q = jnp.ones((1, 16, 2, 8))
+    with pytest.raises(ValueError):
+        attention(q, q, q, impl="pallas")
+
+
+# ---------------------------------------------------------------------------
+# Tuned shapes reach the model call sites
+# ---------------------------------------------------------------------------
+
+
+def test_attention_flash_impl_matches_dense(rng):
+    from repro.models.attention import attention, dense_attention
+
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = attention(q, k, v, causal=True, impl="flash", interpret=True)
+    expect = dense_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-3, rtol=2e-3)
+    # explicit blocks are threaded through, not overridden by the tuner
+    out2 = attention(q, k, v, causal=True, impl="flash", block_q=64,
+                     block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=1e-5, rtol=1e-5)
+    with pytest.raises(ValueError):
+        attention(q, k, v, impl="flash", window=32)
+
+
+def test_rwkv_pallas_backend_matches_xla(rng):
+    from repro.models.rwkv import rwkv_time_mix, rwkv_time_mix_init
+
+    params = rwkv_time_mix_init(rng, 32, 8)
+    x = jax.random.normal(jax.random.fold_in(rng, 2), (2, 40, 32))
+    out_x, _ = rwkv_time_mix(params, x, 8, backend="xla")
+    out_p, _ = rwkv_time_mix(params, x, 8, backend="pallas", chunk=16)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_dispatch_and_sort_kernel_paths(rng):
+    from repro.core import adaptive_matmul, distributed_sort
+
+    a = jax.random.normal(rng, (96, 64), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (64, 80), jnp.float32)
+    out = adaptive_matmul(a, b, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               atol=1e-4, rtol=1e-4)
+    x = jax.random.normal(rng, (300,))
+    out, report = distributed_sort(x, local_sort="pallas")
+    assert report.strategy == "serial"
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# Real measurement (slow: excluded from tier-1, run with -m slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_real_measured_tune_roundtrip(tmp_path):
+    t = Autotuner(cache_dir=tmp_path, measure=True, reps=2)
+    res = tuning.tune_matmul(128, 128, 128, jnp.float32, interpret=True,
+                             tuner=t)
+    assert res.source == "measured"
+    assert res.measured_s is not None and res.measured_s > 0
+    warm = Autotuner(cache_dir=tmp_path, measure=True, bench=_boom_bench)
+    res2 = tuning.tune_matmul(128, 128, 128, jnp.float32, interpret=True,
+                              tuner=warm)
+    assert res2.source == "cache"
+    assert res2.config == res.config
