@@ -11,6 +11,10 @@
   cost_ledger      — CostEngine predicted-vs-measured ledger, v5e datasheet
                      vs backend-calibrated constants (decision flips + table)
                      + autotune prior-vs-measured-optimum deltas
+  serving_bench    — static-batch vs continuous-batching serving under a
+                     staggered arrival trace (tok/s + p50/p95 latency,
+                     token-equivalence anchor, site=serve ledger rows);
+                     writes the machine-readable BENCH_serving.json
 
 Prints ``name,key=value,...`` CSV lines.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME]
@@ -32,6 +36,7 @@ def main() -> None:
         kernels_bench,
         matmul_crossover,
         roofline_table,
+        serving_bench,
         sort_pivots,
         wkv_chunk,
     )
@@ -43,6 +48,7 @@ def main() -> None:
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
         "cost_ledger": cost_ledger.run,
+        "serving_bench": serving_bench.run,
     }
     failed = []
     for name, fn in suites.items():

@@ -14,7 +14,7 @@ from repro.configs import get_config, list_configs
 from repro.data import SyntheticLMData
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
-from repro.serving import ServeEngine
+from repro.serving import ContinuousServeEngine, Request, ServeEngine
 from repro.training import TrainLoopConfig, init_train_state, make_train_step
 
 
@@ -41,11 +41,20 @@ def main():
         state = restore(d, 30, state)
         print("checkpoint roundtrip ok")
 
-    # --- serve ---
-    engine = ServeEngine(model, state["params"], max_len=64)
+    # --- serve (static batch; eos_id=-1 keeps the demo un-truncated) ---
+    engine = ServeEngine(model, state["params"], max_len=64, eos_id=-1)
     prompts = np.arange(1, 9, dtype=np.int32).reshape(2, 4)
     out = engine.generate(prompts, max_new_tokens=8)
     print("generated:", out.tolist())
+
+    # --- serve (continuous batching: slots, chunked prefill, scheduler) ---
+    cont = ContinuousServeEngine(model, state["params"], n_slots=2,
+                                 max_len=64, eos_id=-1)
+    report = cont.run([Request(f"r{i}", prompts[i], 8) for i in range(2)])
+    assert all(np.array_equal(report.output(f"r{i}"), out[i]) for i in range(2))
+    print(f"continuous batching matched token-for-token "
+          f"({report.generated_tokens} tokens, "
+          f"{report.tok_per_s:.0f} tok/s)")
 
 
 if __name__ == "__main__":

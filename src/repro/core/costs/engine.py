@@ -42,7 +42,7 @@ from repro.hw import V5E, HardwareSpec
 class CostQuery:
     """Hashable description of one fork-join decision problem.
 
-    ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard.
+    ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard | serve.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -246,8 +246,83 @@ class CostEngine:
         return Decision(q, "replicate", rep, baseline=rep,
                         alternatives=alts, value="replicate")
 
+    def _solve_serve(self, q: CostQuery) -> Decision:
+        """Serving decision site (site=serve ledger rows).  ``op`` selects:
+
+        * ``prefill_chunk`` — shape=(prompt_len,); choose the prefill chunk
+          length.  Cost = chunked prefill total + a latency-interference
+          term: every active decode slot stalls for one chunk before it can
+          interleave again, so big chunks win on empty pools and shrink as
+          decode occupancy rises.  Baseline = chunk 1 (the per-token replay
+          loop the continuous engine retires).
+        * ``admission`` — shape=(active_decodes,); admit waiting requests
+          into free slots vs decode-only.  Evidence: per-token decode cost
+          at the new vs current occupancy (weight streaming amortizes).
+        * ``decode_step`` — shape=(batch,); the predicted cost of one
+          decode step at this batch composition.  Baseline = the same
+          slots decoded sequentially (no batching); the engine attaches
+          measured step wall times to these rows.
+        """
+        op = q.param("op")
+        fpt = float(q.param("flops_per_token", 0.0))
+        wb = float(q.param("weight_bytes", 0.0))
+        kvb = float(q.param("kv_bytes_per_slot", 0.0))
+        if op == "prefill_chunk":
+            (prompt_len,) = q.shape
+            active = int(q.param("active_decodes", 0))
+            cands_in = q.param("candidates", (1, 8, 16, 32, 64, 128, 256))
+            seen, cands = set(), []
+            for c in cands_in:
+                c = max(1, min(int(c), prompt_len))
+                if c in seen:
+                    continue
+                seen.add(c)
+                total, per_chunk = self.model.serve_prefill_cost(
+                    prompt_len, c, flops_per_token=fpt, weight_bytes=wb,
+                    dtype_bytes=q.dtype_bytes)
+                cands.append(CostBreakdown(
+                    f"chunk_{c}", total, 0.0, active * per_chunk, 0.0))
+            baseline = next((cb for cb in cands if cb.strategy == "chunk_1"),
+                            cands[0])
+            best = min(cands, key=lambda cb: cb.total)
+            return Decision(q, best.strategy, best, baseline=baseline,
+                            alternatives=tuple(cands),
+                            value=int(best.strategy.split("_")[1]))
+        if op == "admission":
+            (active,) = q.shape
+            waiting = int(q.param("waiting", 0))
+            free = int(q.param("free_slots", 0))
+            admit_n = min(waiting, free)
+            cur = self.model.serve_decode_step_cost(
+                active, flops_per_token=fpt, weight_bytes=wb,
+                kv_bytes_per_slot=kvb, dtype_bytes=q.dtype_bytes)
+            new = self.model.serve_decode_step_cost(
+                active + admit_n, flops_per_token=fpt, weight_bytes=wb,
+                kv_bytes_per_slot=kvb, dtype_bytes=q.dtype_bytes)
+            per_tok_cur = cur.total / max(active, 1)
+            per_tok_new = new.total / max(active + admit_n, 1)
+            admit = admit_n > 0 and (active == 0 or per_tok_new <= per_tok_cur)
+            return Decision(
+                q, f"admit_{admit_n}" if admit else "decode_only",
+                new if admit else cur, baseline=cur, alternatives=(cur, new),
+                value=admit_n if admit else 0)
+        if op == "decode_step":
+            (batch,) = q.shape
+            step = self.model.serve_decode_step_cost(
+                batch, flops_per_token=fpt, weight_bytes=wb,
+                kv_bytes_per_slot=kvb, dtype_bytes=q.dtype_bytes)
+            single = self.model.serve_decode_step_cost(
+                1, flops_per_token=fpt, weight_bytes=wb,
+                kv_bytes_per_slot=kvb, dtype_bytes=q.dtype_bytes)
+            sequential = CostBreakdown(
+                "sequential", batch * single.compute, batch * single.memory,
+                0.0, batch * single.fixed)
+            return Decision(q, step.strategy, step, baseline=sequential,
+                            alternatives=(step, sequential), value=batch)
+        raise ValueError(f"unknown serve op: {op!r}")
+
     # ------------------------------------------------------------------
-    # Convenience wrappers (the five decision sites)
+    # Convenience wrappers (the six decision sites)
     # ------------------------------------------------------------------
 
     def decide_matmul(self, m: int, n: int, k: int, *, chips: int,
@@ -280,6 +355,41 @@ class CostEngine:
                            dtype_bytes: int = 2) -> Decision:
         return self.query(CostQuery.make(
             "layer_shard", (m, n, k), chips=tp, dtype_bytes=dtype_bytes))
+
+    def decide_serve_prefill_chunk(
+            self, prompt_len: int, *, flops_per_token: float,
+            weight_bytes: float, active_decodes: int = 0,
+            dtype_bytes: int = 2,
+            candidates: Sequence[int] = (1, 8, 16, 32, 64, 128, 256)
+    ) -> Decision:
+        return self.query(CostQuery.make(
+            "serve", (prompt_len,), dtype_bytes=dtype_bytes,
+            op="prefill_chunk", flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes), active_decodes=int(active_decodes),
+            candidates=tuple(candidates)))
+
+    def decide_serve_admission(self, active: int, *, waiting: int,
+                               free_slots: int, flops_per_token: float,
+                               weight_bytes: float,
+                               kv_bytes_per_slot: float = 0,
+                               dtype_bytes: int = 2) -> Decision:
+        return self.query(CostQuery.make(
+            "serve", (active,), dtype_bytes=dtype_bytes, op="admission",
+            waiting=int(waiting), free_slots=int(free_slots),
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_slot=int(kv_bytes_per_slot)))
+
+    def decide_serve_decode_step(self, batch: int, *, flops_per_token: float,
+                                 weight_bytes: float,
+                                 kv_bytes_per_slot: float = 0,
+                                 dtype_bytes: int = 2,
+                                 record: bool = True) -> Decision:
+        return self.query(CostQuery.make(
+            "serve", (batch,), dtype_bytes=dtype_bytes, op="decode_step",
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_slot=int(kv_bytes_per_slot)), record=record)
 
     # ------------------------------------------------------------------
     # Crossover solvers (delegate to the analytic model on this hw)

@@ -25,7 +25,7 @@ from repro.core.costs.model import CostBreakdown
 @dataclasses.dataclass
 class LedgerEntry:
     seq: int
-    site: str  # matmul | sort | scan_chunk | moe_dispatch | layer_shard | autotune
+    site: str  # matmul | sort | scan_chunk | moe_dispatch | layer_shard | autotune | serve
     query: Dict[str, Any]
     choice: str
     predicted_s: float

@@ -269,6 +269,47 @@ class OverheadModel:
         )
 
     # ------------------------------------------------------------------
+    # Serving (continuous batching: decode occupancy + prefill chunking)
+    # ------------------------------------------------------------------
+
+    def serve_decode_step_cost(self, batch: int, *, flops_per_token: float,
+                               weight_bytes: float, kv_bytes_per_slot: float = 0,
+                               dtype_bytes: int = 2) -> CostBreakdown:
+        """One batched greedy decode step at occupancy ``batch``.
+
+        Compute scales with occupancy; the weight stream does NOT — every
+        step reads all active parameters once regardless of batch, which is
+        exactly why continuous batching pays: per-token cost falls as
+        ``weight_bytes / (batch * bw)``.  Per-slot decode state (KV cache)
+        re-reads do scale with occupancy."""
+        peak = (self.hw.peak_flops_bf16 if dtype_bytes == 2
+                else self.hw.peak_flops_f32)
+        compute = max(batch, 1) * flops_per_token / (peak * self.mxu_eff)
+        memory = (weight_bytes + max(batch, 1) * kv_bytes_per_slot) / (
+            self.hw.hbm_bw * self.mem_eff)
+        return CostBreakdown(f"decode_b{batch}", compute, memory, 0.0,
+                             self.hw.kernel_launch_s)
+
+    def serve_prefill_cost(self, prompt_len: int, chunk: int, *,
+                           flops_per_token: float, weight_bytes: float,
+                           dtype_bytes: int = 2):
+        """Chunked prefill of one prompt: (total_s, per_chunk_s).
+
+        Each chunk pays one weight stream and one launch, so tiny chunks
+        (the per-token replay loop, chunk=1) re-stream the weights
+        ``prompt_len`` times; one huge chunk is compute-optimal but holds
+        the device for ``per_chunk_s``, stalling every concurrently
+        decoding slot — the admission/chunking granularity tradeoff the
+        scheduler resolves per decision."""
+        peak = (self.hw.peak_flops_bf16 if dtype_bytes == 2
+                else self.hw.peak_flops_f32)
+        n_chunks = math.ceil(prompt_len / max(chunk, 1))
+        compute = chunk * flops_per_token / (peak * self.mxu_eff)
+        memory = weight_bytes / (self.hw.hbm_bw * self.mem_eff)
+        per_chunk = max(compute, memory) + self.hw.kernel_launch_s
+        return n_chunks * per_chunk, per_chunk
+
+    # ------------------------------------------------------------------
     # MoE dispatch strategy (EP overhead management)
     # ------------------------------------------------------------------
 

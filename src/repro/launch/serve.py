@@ -1,8 +1,15 @@
-"""Serving launcher: batched greedy decoding with a KV cache.
+"""Serving launcher: trace-driven continuous batching vs the static baseline.
+
+Builds a request trace (all-at-once, staggered, or Poisson arrivals), runs
+it through the chosen engine(s), and reports per-request latency, aggregate
+throughput, and the ``site=serve`` slice of the overhead ledger (every
+admission / prefill-chunk / decode-composition decision, predicted vs
+measured).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
-      --batch 4 --prompt-len 8 --max-new 16
+      --requests 8 --prompt-len 8 --max-new 16 --slots 4 \
+      --arrival staggered --gap-ms 20 --engine both
 """
 
 from __future__ import annotations
@@ -15,36 +22,146 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.costs.engine import get_engine
 from repro.models import build_model
-from repro.serving import ServeEngine
+from repro.serving import ContinuousServeEngine, Request, ServeEngine
+
+
+def build_trace(args, cfg) -> list:
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(
+        1, cfg.vocab_size, (args.requests, args.prompt_len)).astype(np.int32)
+    if args.arrival == "all":
+        arrivals = np.zeros(args.requests)
+    elif args.arrival == "staggered":
+        arrivals = np.arange(args.requests) * (args.gap_ms / 1e3)
+    elif args.arrival == "poisson":
+        gaps = rng.exponential(1.0 / args.rate, args.requests)
+        arrivals = np.cumsum(gaps) - gaps[0]
+    else:
+        raise ValueError(args.arrival)
+    return [Request(f"r{i}", prompts[i], args.max_new, arrival_s=float(arrivals[i]))
+            for i in range(args.requests)]
+
+
+def emitted_count(out: np.ndarray, eos_id: int) -> int:
+    """Tokens actually generated: everything up to and including the first
+    EOS per row (the rest is deterministic padding)."""
+    total = 0
+    for row in out:
+        hits = np.flatnonzero(row == eos_id)
+        total += int(hits[0]) + 1 if hits.size else row.shape[0]
+    return total
+
+
+def run_static(args, model, params, trace):
+    """Static baseline semantics for a trace: wait for the whole batch to
+    arrive, then decode it in lockstep; every request's latency includes
+    the wait for the last arrival."""
+    engine = ServeEngine(model, params, max_len=args.max_len, eos_id=args.eos_id)
+    prompts = np.stack([r.prompt for r in trace])
+    # warm the jit outside the timed window
+    engine.generate(prompts[:, : args.prompt_len], max_new_tokens=1)
+    start = max(r.arrival_s for r in trace)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=args.max_new)
+    wall = time.perf_counter() - t0
+    gen = emitted_count(out, engine.eos_id)
+    lats = [start + wall - r.arrival_s for r in trace]
+    return {
+        "engine": "static",
+        "wall_s": wall,
+        "tok_per_s": gen / wall if wall > 0 else 0.0,
+        "p50": float(np.percentile(lats, 50)),
+        "p95": float(np.percentile(lats, 95)),
+        "outputs": out,
+        "generated_tokens": gen,
+    }
+
+
+def run_continuous(args, model, params, trace):
+    engine = ContinuousServeEngine(
+        model, params, n_slots=args.slots, max_len=args.max_len,
+        eos_id=args.eos_id, prefill_chunk=args.prefill_chunk)
+    engine.warmup(args.prompt_len)
+    report = engine.run(trace)
+    pct = report.latency_percentiles()
+    return {
+        "engine": "continuous",
+        "wall_s": report.wall_s,
+        "tok_per_s": report.tok_per_s,
+        "p50": pct["p50"],
+        "p95": pct["p95"],
+        "report": report,
+    }
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="per-slot cache length; default prompt_len + max_new "
+                         "(a request must fit its slot end to end)")
+    ap.add_argument("--arrival", choices=("all", "staggered", "poisson"),
+                    default="staggered")
+    ap.add_argument("--gap-ms", type=float, default=20.0,
+                    help="staggered: inter-arrival gap")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="poisson: mean arrivals per second")
+    ap.add_argument("--engine", choices=("static", "continuous", "both"),
+                    default="both")
+    ap.add_argument("--prefill-chunk", default="auto",
+                    help="'auto' (CostEngine decision) or an explicit chunk")
+    ap.add_argument("--eos-id", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.max_len is None:
+        args.max_len = args.prompt_len + args.max_new
+    need = args.prompt_len + args.max_new
+    if need > args.max_len:
+        ap.error(f"--max-len {args.max_len} cannot hold prompt_len "
+                 f"{args.prompt_len} + max_new {args.max_new} = {need}")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.max_new + 8)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
-    t0 = time.time()
-    out = engine.generate(prompts, max_new_tokens=args.max_new)
-    dt = time.time() - t0
-    toks = args.batch * args.max_new
-    print(f"generated {out.shape} in {dt:.2f}s ({toks/dt:.1f} tok/s)")
-    for row in out[:2]:
-        print("  ", row.tolist())
+    results = []
+    if args.engine in ("static", "both"):
+        results.append(run_static(args, model, params, build_trace(args, cfg)))
+    if args.engine in ("continuous", "both"):
+        results.append(run_continuous(args, model, params, build_trace(args, cfg)))
+
+    for res in results:
+        print(f"[{res['engine']}] wall {res['wall_s']:.2f}s  "
+              f"{res['tok_per_s']:.1f} tok/s  "
+              f"p50 {res['p50']*1e3:.0f}ms  p95 {res['p95']*1e3:.0f}ms")
+        if "report" in res:
+            for r in res["report"].requests:
+                print(f"    {r.rid}: arrival {r.arrival_s*1e3:6.0f}ms  "
+                      f"queue {r.queue_wait_s*1e3:6.0f}ms  "
+                      f"ttft {r.ttft_s*1e3:6.0f}ms  "
+                      f"latency {r.latency_s*1e3:6.0f}ms  "
+                      f"tokens {len(r.tokens)}")
+
+    ledger = get_engine().ledger
+    serve_rows = [e for e in ledger.entries if e.site == "serve"]
+    measured = [e for e in serve_rows if e.measured_s is not None]
+    print(f"serve ledger: {len(serve_rows)} decisions, "
+          f"{len(measured)} with measured wall time")
+    # tail: the head is warmup rows whose measured times include jit compile
+    for e in serve_rows[-12:]:
+        meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
+        print(f"    {e.query.get('op', '?'):14s} {e.choice:14s} "
+              f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")
     return 0
 
 

@@ -190,31 +190,55 @@ def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int) ->
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, Hq, hd)
+    q: jax.Array,  # (B, S_new, Hq, hd) — S_new > 1 during chunked prefill
     k_cache: jax.Array,  # (B, Smax, Hkv, hd)
     v_cache: jax.Array,
-    cache_pos: jax.Array,  # scalar int32: number of valid tokens INCLUDING new
+    cache_pos: jax.Array,  # () or (B,) int32: valid tokens INCLUDING new
     *,
     window: int = 0,
 ) -> jax.Array:
-    b, _, hq, hd = q.shape
+    """Attention against a KV cache.
+
+    ``cache_pos`` counts valid cache entries including the ``S_new`` just
+    inserted; a (B,) vector gives each slot its own fill level (continuous
+    batching).  Queries are causal within the chunk: query ``i`` attends
+    to ``kpos < cache_pos - (S_new - 1) + i``, which for S_new = 1 is the
+    historical single-token mask.
+    """
+    b, sq, hq, hd = q.shape
     n_kv = k_cache.shape[2]
+    skv = k_cache.shape[1]
     qg = _group_query(q, n_kv).astype(jnp.float32) * hd ** -0.5
     s = jnp.einsum("bsngd,btnd->bnsgt", qg, k_cache.astype(jnp.float32))
-    kpos = jnp.arange(k_cache.shape[1])
-    mask = kpos < cache_pos
+    kpos = jnp.arange(skv)
+    limit = (jnp.reshape(jnp.asarray(cache_pos), (-1, 1))
+             - (sq - 1) + jnp.arange(sq)[None])  # (1 or B, S_new)
+    mask = kpos[None, None, :] < limit[:, :, None]
     if window:
-        mask &= kpos >= cache_pos - window
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask &= kpos[None, None, :] >= limit[:, :, None] - window
+    mask = jnp.broadcast_to(mask, (b, sq, skv))
+    s = jnp.where(mask[:, None, :, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bnsgt,btnd->bsngd", p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
 
 
 def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
-    """Insert (B, S_new, Hkv, hd) at position ``pos`` along the seq axis."""
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    """Insert (B, S_new, Hkv, hd) at position ``pos`` along the seq axis.
+
+    ``pos`` may be a scalar (whole batch at one position) or a (B,) vector
+    (per-slot insert positions for continuous batching)."""
+    pos = jnp.asarray(pos)
+    k_new = k_new.astype(k_cache.dtype)
+    v_new = v_new.astype(v_cache.dtype)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, pos, 0, 0))
+    else:
+        upd = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
+        k_cache = upd(k_cache, k_new, pos)
+        v_cache = upd(v_cache, v_new, pos)
     return k_cache, v_cache
 
 

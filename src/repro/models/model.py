@@ -34,6 +34,35 @@ def _positions_default(b, s, offset=0):
     return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32) + offset, (b, s))
 
 
+def _offset_positions(b: int, s: int, offset) -> jax.Array:
+    """(B, S) absolute positions from a scalar or per-slot (B,) offset."""
+    off = jnp.asarray(offset, jnp.int32)
+    off = off[:, None] if off.ndim else off[None, None]
+    return jnp.broadcast_to(off + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def mrope_positions(b: int, s: int, offset) -> jax.Array:
+    """(B, S, 3) text-only mrope positions: the three planes share the
+    sequential index.  ``offset`` is a scalar or a per-slot (B,) vector —
+    the one helper both the prefill and decode serving paths use instead of
+    hand-building position tensors."""
+    pos = _offset_positions(b, s, offset)
+    return jnp.broadcast_to(pos[:, :, None], (b, s, 3))
+
+
+def _zero_slots(leaf, mask, axis):
+    """Zero ``leaf`` where the slot ``mask`` is True along ``axis``."""
+    shape = [1] * leaf.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), jnp.zeros((), leaf.dtype), leaf)
+
+
+def _insert_slot_leaf(axis, dst, src, slot):
+    """Copy the single slot of ``src`` (slot-dim 1) into ``dst`` at ``slot``."""
+    return jax.lax.dynamic_update_index_in_dim(
+        dst, jax.lax.index_in_dim(src, 0, axis, keepdims=False), slot, axis)
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -43,10 +72,14 @@ class Model:
     init: Callable[..., Any]
     loss: Callable[..., Any]  # (params, batch, ctx) -> (loss, metrics)
     decode_step: Callable[..., Any]  # (params, state, batch, ctx) -> (logits, state)
-    init_decode_state: Callable[..., Any]  # (batch_size, max_len) -> state
+    init_decode_state: Callable[..., Any]  # (batch_size, max_len[, per_slot]) -> state
     forward_logits: Callable[..., Any] = None  # (params, batch, ctx) -> (B,S,V)
     prefill: Callable[..., Any] = None  # (params, batch, ctx) -> (B,1,V) last-pos logits
     vlm_patches: Callable[[int], int] = staticmethod(lambda s: 0)
+    # slot-indexed decode-state surgery (continuous-batching slot pool);
+    # both take/return per-slot (per_slot=True) states
+    reset_decode_slots: Callable[..., Any] = None  # (state, slot_mask) -> state
+    insert_decode_slot: Callable[..., Any] = None  # (state, src, slot) -> state
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -91,9 +124,7 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
         if cfg.pos_type == "mrope":
             positions = batch["positions"]  # (B, S, 3)
         elif decode_offset is not None:
-            positions = jnp.broadcast_to(
-                jnp.asarray(decode_offset, jnp.int32)[None, None], (b, s)
-            ) + jnp.arange(s, dtype=jnp.int32)[None]
+            positions = _offset_positions(b, s, decode_offset)
         else:
             positions = _positions_default(b, s)
         return x, positions
@@ -141,10 +172,13 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
         total = ce + AUX_LOSS_WEIGHT * aux + Z_LOSS_WEIGHT * z
         return total, {"ce": ce, "aux": aux, "z": z}
 
-    def init_decode_state(batch_size: int, max_len: int):
+    def init_decode_state(batch_size: int, max_len: int, per_slot: bool = False):
+        """``per_slot=True`` gives every batch row its own cache position
+        (continuous batching); the default scalar keeps lockstep decode."""
+        pos_shape = (batch_size,) if per_slot else ()
         return {
             "layers": tfm.stack_init_state(cfg, batch_size, max_len),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros(pos_shape, jnp.int32),
         }
 
     def decode_step(params, state, batch, ctx=None):
@@ -160,10 +194,30 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
         logits = _logits(params, x)
         return logits, {"layers": new_layers, "pos": pos + batch["tokens"].shape[1]}
 
+    def reset_decode_slots(state, slot_mask):
+        """Zero the decode state of every slot where ``slot_mask`` is True
+        (per-slot state only)."""
+        mask = jnp.asarray(slot_mask, bool)
+        layers = tfm.stack_state_map(
+            cfg, lambda ax, leaf: _zero_slots(leaf, mask, ax), state["layers"])
+        return {"layers": layers, "pos": jnp.where(mask, 0, state["pos"])}
+
+    def insert_decode_slot(state, src, slot):
+        """Copy a freshly-prefilled single-slot state ``src`` (batch 1,
+        per-slot) into slot ``slot`` of a pooled state."""
+        layers = tfm.stack_state_map(
+            cfg, functools.partial(_insert_slot_leaf, slot=slot),
+            state["layers"], src["layers"])
+        pos = jax.lax.dynamic_update_index_in_dim(
+            state["pos"], src["pos"][0], slot, 0)
+        return {"layers": layers, "pos": pos}
+
     return Model(
         cfg=cfg, init=init, loss=loss, decode_step=decode_step,
         init_decode_state=init_decode_state, forward_logits=forward_logits,
         prefill=prefill, vlm_patches=functools.partial(_vlm_patches, cfg),
+        reset_decode_slots=reset_decode_slots,
+        insert_decode_slot=insert_decode_slot,
     )
 
 
@@ -228,10 +282,11 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         total = ce + Z_LOSS_WEIGHT * z
         return total, {"ce": ce, "z": z}
 
-    def init_decode_state(batch_size: int, max_len: int):
+    def init_decode_state(batch_size: int, max_len: int, per_slot: bool = False):
         hd = cfg.resolved_head_dim
         enc_len = min(ENCDEC_DECODE_ENC_LEN, max_len)
-        state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        pos_shape = (batch_size,) if per_slot else ()
+        state: Dict[str, Any] = {"pos": jnp.zeros(pos_shape, jnp.int32)}
         for i in range(cfg.n_layers):
             state[f"dec_{i}"] = {
                 "k": jnp.zeros((batch_size, max_len, cfg.n_kv_heads, hd), dtype),
@@ -248,7 +303,7 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         tokens = batch["tokens"]
         b, s = tokens.shape
         x = embed_lookup(params["embed"], tokens)
-        positions = jnp.broadcast_to(pos[None, None], (b, s)).astype(jnp.int32)
+        positions = _offset_positions(b, s, pos)
         new_state = {"pos": pos + s}
         for i in range(cfg.n_layers):
             lp = params[f"dec_{i}"]
@@ -278,9 +333,21 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
         return unembed(params["unembed"], x)
 
+    def reset_decode_slots(state, slot_mask):
+        """Enc-dec decode state keeps every leaf's slot axis at 0 (including
+        per-slot ``pos``), so one uniform tree map suffices."""
+        mask = jnp.asarray(slot_mask, bool)
+        return jax.tree.map(lambda leaf: _zero_slots(leaf, mask, 0), state)
+
+    def insert_decode_slot(state, src, slot):
+        return jax.tree.map(
+            lambda dst, s: _insert_slot_leaf(0, dst, s, slot), state, src)
+
     return Model(
         cfg=cfg, init=init, loss=loss, decode_step=decode_step,
         init_decode_state=init_decode_state, prefill=prefill,
+        reset_decode_slots=reset_decode_slots,
+        insert_decode_slot=insert_decode_slot,
     )
 
 

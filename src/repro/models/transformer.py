@@ -194,6 +194,33 @@ def layer_init_state(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtyp
 
 
 # ---------------------------------------------------------------------------
+# Slot-indexed decode-state surgery (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+
+def stack_state_map(cfg: ModelConfig, fn, *states):
+    """Map ``fn(batch_axis, *leaves)`` over decode-state trees from
+    ``stack_init_state``, supplying each leaf's slot (batch) axis.
+
+    Scan and period-scan layouts stack layer/group states with a leading
+    layer axis, so their slot axis is 1; unrolled layers (and period-scan
+    ``rest_*`` tails) keep the slot axis at 0.  The serving slot pool uses
+    this to reset/insert a single slot without knowing the layout.
+    """
+    if _use_scan(cfg):
+        return jax.tree.map(lambda *ls: fn(1, *ls), *states)
+    if _use_period_scan(cfg):
+        out = {"groups": jax.tree.map(
+            lambda *ls: fn(1, *ls), *[s["groups"] for s in states])}
+        for key in states[0]:
+            if key != "groups":
+                out[key] = jax.tree.map(
+                    lambda *ls: fn(0, *ls), *[s[key] for s in states])
+        return out
+    return jax.tree.map(lambda *ls: fn(0, *ls), *states)
+
+
+# ---------------------------------------------------------------------------
 # Whole decoder stack
 # ---------------------------------------------------------------------------
 

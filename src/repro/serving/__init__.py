@@ -1,1 +1,20 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
+"""Serving: static-batch baseline + continuous-batching serve stack.
+
+engine.py    — ServeEngine (fixed-batch anchor) and ContinuousServeEngine
+               (slot-pooled, chunked-prefill, CostEngine-scheduled)
+slots.py     — SlotPool: per-slot insert/reset/evict of pooled decode state
+scheduler.py — Request queue + ServeScheduler (site=serve CostEngine
+               decisions: admission, prefill chunk, decode composition)
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    ContinuousServeEngine,
+    ServeEngine,
+    ServeReport,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    Request,
+    ServeScheduler,
+    supports_chunked_prefill,
+)
+from repro.serving.slots import SlotPool  # noqa: F401

@@ -1,53 +1,324 @@
-"""Batched serving engine: prefill + greedy decode over KV caches.
+"""Serving engines: static-batch baseline + slot-pooled continuous batching.
 
-Small but real: a fixed-batch continuous loop with per-slot completion
-tracking.  Prefill reuses the training forward (teacher-forced logits) and
-then primes the decode state by replaying the prompt through decode_step —
-on CPU CI scale that is exact and simple; on TPU the prefill path lowers the
-chunked-attention forward once per batch.
+``ServeEngine`` is the fixed-batch baseline: one prompt matrix in, lockstep
+greedy decode out, with EOS masking and deterministic padding.  It is the
+token-for-token correctness anchor for the continuous engine.
+
+``ContinuousServeEngine`` is the real serve stack (DESIGN.md §5): requests
+arrive over time, a ``SlotPool`` holds one pooled decode state whose slots
+turn over as requests finish (insert/reset without re-jitting), prompts are
+lowered through chunked prefill (multi-token chunks through the same
+``decode_step`` forward the decode path runs; chunk-1 replay fallback for
+families without an exact chunked form), and every admission / chunk-size /
+batch-composition choice is a CostEngine ``CostQuery -> Decision`` ledgered
+as a ``site=serve`` row with the measured wall time attached.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from collections import deque
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Model
+from repro.core.costs.engine import CostEngine
+from repro.models.model import Model, mrope_positions
+from repro.serving.scheduler import Request, ServeScheduler
+from repro.serving.slots import SlotPool
 from repro.training.step import make_serve_step
+
+
+def _check_fits(prompt_len: int, max_new: int, max_len: int, who: str) -> None:
+    """One explicit slot-capacity rule instead of the old silent ``+ 8``
+    slack: a request must fit its slot end to end."""
+    need = prompt_len + max_new
+    if need > max_len:
+        raise ValueError(
+            f"{who}: prompt_len {prompt_len} + max_new_tokens {max_new} "
+            f"= {need} exceeds max_len {max_len}; raise max_len (it must "
+            f"cover prompt + generated tokens) or shorten the request")
+
+
+# ---------------------------------------------------------------------------
+# Static-batch baseline
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Fixed-batch greedy decoding with EOS masking.
+
+    All sequences decode in lockstep; a sequence that emits ``eos_id``
+    keeps its EOS in the output, pads the rest with ``pad_id`` and is fed
+    padding (masked) until the whole batch finishes — the loop stops early
+    once every slot is done."""
+
     model: Model
     params: object
     max_len: int = 256
     eos_id: int = 0
+    pad_id: Optional[int] = None
 
     def __post_init__(self):
         self._step = jax.jit(make_serve_step(self.model))
+        if self.pad_id is None:
+            self.pad_id = self.eos_id
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32) -> np.ndarray:
-        """prompts: (B, P) int32.  Returns (B, max_new_tokens)."""
+        """prompts: (B, P) int32.  Returns (B, max_new_tokens): generated
+        tokens up to and including EOS, deterministically padded after it."""
         b, p = prompts.shape
+        _check_fits(p, max_new_tokens, self.max_len, "ServeEngine.generate")
         state = self.model.init_decode_state(b, self.max_len)
-        # prime the caches with the prompt
+        mrope = self.model.cfg.pos_type == "mrope"
+        # prime the caches with the prompt (per-token replay baseline)
         tok = None
         for t in range(p):
             batch = {"tokens": jnp.asarray(prompts[:, t : t + 1], jnp.int32)}
-            if self.model.cfg.pos_type == "mrope":
-                batch["positions"] = jnp.full((b, 1, 3), t, jnp.int32)
+            if mrope:
+                batch["positions"] = mrope_positions(b, 1, t)
             tok, state = self._step(self.params, state, batch)
-        outs: List[np.ndarray] = []
-        cur = tok[:, None]
+        out = np.full((b, max_new_tokens), self.pad_id, np.int32)
+        done = np.zeros((b,), bool)
+        cur = np.asarray(tok)
         for i in range(max_new_tokens):
-            outs.append(np.asarray(cur[:, 0]))
-            batch = {"tokens": cur}
-            if self.model.cfg.pos_type == "mrope":
-                batch["positions"] = jnp.full((b, 1, 3), p + i, jnp.int32)
+            out[:, i] = np.where(done, self.pad_id, cur)
+            done |= cur == self.eos_id
+            if done.all() or i == max_new_tokens - 1:
+                break
+            feed = np.where(done, self.pad_id, cur).astype(np.int32)
+            batch = {"tokens": jnp.asarray(feed[:, None])}
+            if mrope:
+                batch["positions"] = mrope_positions(b, 1, p + i)
             nxt, state = self._step(self.params, state, batch)
-            cur = nxt[:, None]
-        return np.stack(outs, axis=1)
+            cur = np.asarray(nxt)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Per-request latencies + aggregate throughput for one trace run."""
+
+    requests: List[Request]
+    wall_s: float
+    pad_id: int
+
+    def output(self, rid: str, max_new_tokens: Optional[int] = None) -> np.ndarray:
+        req = next(r for r in self.requests if r.rid == rid)
+        n = max_new_tokens if max_new_tokens is not None else req.max_new_tokens
+        out = np.full((n,), self.pad_id, np.int32)
+        out[: len(req.tokens)] = req.tokens
+        return out
+
+    def outputs(self) -> Dict[str, np.ndarray]:
+        return {r.rid: self.output(r.rid) for r in self.requests}
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.requests)
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
+        lats = [r.latency_s for r in self.requests if r.latency_s is not None]
+        if not lats:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def as_dict(self) -> dict:
+        return {
+            "wall_s": self.wall_s,
+            "generated_tokens": self.generated_tokens,
+            "tok_per_s": self.tok_per_s,
+            **self.latency_percentiles(),
+            "requests": [
+                {
+                    "rid": r.rid,
+                    "prompt_len": r.prompt_len,
+                    "generated": len(r.tokens),
+                    "arrival_s": r.arrival_s,
+                    "queue_wait_s": r.queue_wait_s,
+                    "ttft_s": r.ttft_s,
+                    "latency_s": r.latency_s,
+                }
+                for r in self.requests
+            ],
+        }
+
+
+class ContinuousServeEngine:
+    """Slot-pooled continuous batching with CostEngine-driven scheduling.
+
+    Token-for-token equivalent to ``ServeEngine`` on any fixed request set:
+    same greedy decode over the same caches, just with slots admitted,
+    retired and refilled independently instead of in lockstep.
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: int = 0,
+                 pad_id: Optional[int] = None,
+                 cost_engine: Optional[CostEngine] = None,
+                 prefill_chunk: Union[str, int] = "auto"):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = eos_id if pad_id is None else pad_id
+        if prefill_chunk != "auto":
+            prefill_chunk = int(prefill_chunk)
+        self.prefill_chunk = prefill_chunk
+        self.pool = SlotPool(model, n_slots, max_len)
+        self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
+        self._decode = jax.jit(make_serve_step(model))
+        self._prefill_step = jax.jit(
+            lambda p, s, b: model.decode_step(p, s, b))
+        self._mrope = model.cfg.pos_type == "mrope"
+        # host mirrors of per-slot decode position / last emitted token
+        self._next_pos = np.zeros((n_slots,), np.int64)
+        self._last_tok = np.full((n_slots,), self.pad_id, np.int32)
+        self._last_composition: Optional[int] = None
+
+    # ------------------------------------------------------------------
+
+    def _chunked_prefill(self, req: Request):
+        """Lower the prompt through the decode forward in scheduler-chosen
+        chunks.  Returns (first_token, single-slot state, decision, dt)."""
+        override = None if self.prefill_chunk == "auto" else self.prefill_chunk
+        chunk, dec = self.scheduler.prefill_chunk(
+            req.prompt_len, active_decodes=self.pool.active_count,
+            override=override)
+        prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
+        state = self.model.init_decode_state(1, self.max_len, per_slot=True)
+        t0 = time.perf_counter()
+        logits = None
+        off = 0
+        while off < req.prompt_len:
+            c = min(chunk, req.prompt_len - off)
+            batch = {"tokens": jnp.asarray(prompt[:, off : off + c])}
+            if self._mrope:
+                batch["positions"] = mrope_positions(1, c, off)
+            logits, state = self._prefill_step(self.params, state, batch)
+            off += c
+        first = int(np.asarray(logits)[0, -1].argmax())
+        dt = time.perf_counter() - t0
+        self.scheduler.record_measured(
+            dec, dt, note=f"prefill len={req.prompt_len} chunk={chunk}")
+        return first, state, dt
+
+    def _admit(self, req: Request, now) -> None:
+        """``now`` is the run clock (callable): the first token is stamped
+        AFTER prefill returns, so TTFT includes the prefill wall time."""
+        req.admitted_s = now()
+        first, state, _ = self._chunked_prefill(req)
+        req.tokens.append(first)
+        req.first_token_s = now()
+        if first == self.eos_id or req.max_new_tokens <= 1:
+            req.finish_s = req.first_token_s
+            return
+        slot = self.pool.acquire(req)
+        self.pool.insert(slot, state)
+        self._next_pos[slot] = req.prompt_len
+        self._last_tok[slot] = first
+
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[Request],
+            now_fn=time.perf_counter) -> ServeReport:
+        """Run a request trace to completion.  ``now_fn`` is injectable so
+        tests can pin a virtual clock (arrivals then resolve instantly)."""
+        for r in requests:
+            _check_fits(r.prompt_len, r.max_new_tokens, self.max_len,
+                        f"request {r.rid!r}")
+            r.tokens = []
+            r.admitted_s = r.first_token_s = r.finish_s = None
+        queue = deque(sorted(requests, key=lambda r: r.arrival_s))  # stable
+        active: Dict[int, Request] = {}
+        t0 = now_fn()
+        offset = 0.0  # event-skip accumulator for frozen (virtual) clocks
+        now = lambda: now_fn() - t0 + offset  # noqa: E731
+
+        while queue or active:
+            # --- admission (scheduler decision per round) ---
+            while queue and self.pool.free_count:
+                t = now()
+                arrived = sum(1 for r in queue if r.arrival_s <= t)
+                if not arrived:
+                    break
+                n_admit, _ = self.scheduler.admission(
+                    active=self.pool.active_count, waiting=arrived,
+                    free_slots=self.pool.free_count)
+                if n_admit <= 0:
+                    break
+                for _ in range(min(n_admit, self.pool.free_count)):
+                    self._admit(queue.popleft(), now)
+                active = {s: self.pool.owner(s)
+                          for s in self.pool.active_slots()}
+            if not active:
+                if queue:
+                    wait = queue[0].arrival_s - now()
+                    if wait > 0:
+                        before = now()
+                        time.sleep(min(wait, 0.05))
+                        if now() <= before:
+                            # pinned test clock: jump straight to the next
+                            # arrival instead of sleeping forever
+                            offset += wait
+                continue
+
+            # --- one decode step over the pool ---
+            batch_size = len(active)
+            dec = self.scheduler.decode_step(
+                batch_size, record=batch_size != self._last_composition)
+            self._last_composition = batch_size
+            mask = self.pool.active_mask()
+            batch = {
+                "tokens": jnp.asarray(self._last_tok[:, None]),
+                "active": jnp.asarray(mask),
+            }
+            if self._mrope:
+                batch["positions"] = mrope_positions(
+                    self.pool.n_slots, 1,
+                    jnp.asarray(self._next_pos, jnp.int32))
+            t_step = time.perf_counter()
+            tok, self.pool.state = self._decode(
+                self.params, self.pool.state, batch)
+            tok_np = np.asarray(tok)  # sync point
+            self.scheduler.record_measured(
+                dec, time.perf_counter() - t_step,
+                note=f"decode step b={batch_size}")
+            self._next_pos[mask] += 1
+            t_emit = now()
+            for slot in list(active):
+                req = active[slot]
+                tk = int(tok_np[slot])
+                req.tokens.append(tk)
+                if tk == self.eos_id or len(req.tokens) >= req.max_new_tokens:
+                    req.finish_s = t_emit
+                    self.pool.release(slot)
+                    self._last_tok[slot] = self.pad_id
+                    self._next_pos[slot] = 0
+                    del active[slot]
+                else:
+                    self._last_tok[slot] = tk
+
+        return ServeReport(requests=list(requests), wall_s=now(),
+                           pad_id=self.pad_id)
+
+    def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
+        """Compile the prefill/decode/insert/reset executables outside any
+        timed trace (one dummy request through the normal machinery)."""
+        req = Request("_warmup", np.ones((prompt_len,), np.int32),
+                      max_new_tokens)
+        self.run([req])
+        self._last_composition = None

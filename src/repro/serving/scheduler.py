@@ -1,0 +1,153 @@
+"""Request queue + CostEngine-driven serving scheduler.
+
+Every scheduling choice on the serve path — whether to admit waiting
+requests, what prefill chunk length to lower, what the current decode batch
+composition costs — is phrased as a ``CostQuery`` against the calibrated
+CostEngine and ledgered as a ``site=serve`` row, exactly like the other
+fork-join decision sites (DESIGN.md §3, §5).  The scheduler never touches
+device state; it hands verdicts to the ContinuousServeEngine, which
+executes them and attaches measured wall times back onto the ledger rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.costs.engine import CostEngine, Decision, resolve_engine
+
+PREFILL_CHUNK_CANDIDATES = (1, 8, 16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.  ``arrival_s`` is relative to trace start;
+    result fields are filled in by the engine."""
+
+    rid: str
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    # --- filled by the engine ---
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.admitted_s is None:
+            return None
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token, from arrival (includes queue wait)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill lowers multi-token chunks through the decode path.
+    That is exact for full-attention stacks (per-query rows of the same
+    cache attention the per-token loop runs).  Families with ring-buffer
+    local windows (wrap-around inserts) or recurrent single-step decode
+    forms (wkv_step vs the chunked form) fall back to chunk-1 replay, which
+    reproduces the per-token path bit for bit."""
+    return all(kind == "attn" for kind in cfg.block_pattern)
+
+
+class ServeScheduler:
+    """Admission + granularity decisions for the continuous-batching engine."""
+
+    def __init__(self, cfg: ModelConfig, engine: Optional[CostEngine] = None, *,
+                 max_len: int,
+                 chunk_candidates: Tuple[int, ...] = PREFILL_CHUNK_CANDIDATES):
+        self.cfg = cfg
+        self.engine = resolve_engine(engine)
+        self.chunk_candidates = tuple(chunk_candidates)
+        self.dtype_bytes = 4 if cfg.dtype == "float32" else 2
+        # per-token work/weight-stream constants for the analytic serve costs
+        active_params = cfg.active_param_count()
+        self.flops_per_token = 2 * active_params
+        self.weight_bytes = active_params * self.dtype_bytes
+        self.kv_bytes_per_slot = self._kv_bytes_per_slot(cfg, max_len)
+
+    @staticmethod
+    def _kv_bytes_per_slot(cfg: ModelConfig, max_len: int) -> int:
+        """Approximate per-slot decode-state bytes re-read each step."""
+        hd = cfg.resolved_head_dim
+        dtype_bytes = 4 if cfg.dtype == "float32" else 2
+        total = 0
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i)
+            if kind == "attn":
+                total += 2 * max_len * cfg.n_kv_heads * hd * dtype_bytes
+            elif kind == "local":
+                total += 2 * cfg.window_size * cfg.n_kv_heads * hd * dtype_bytes
+            elif kind == "rglru":
+                total += (cfg.lru_width or cfg.d_model) * 4
+            elif kind == "rwkv":
+                h = cfg.d_model // cfg.rnn_head_dim
+                total += h * cfg.rnn_head_dim * cfg.rnn_head_dim * 4
+        return total
+
+    # ------------------------------------------------------------------
+    # Decisions (each one a site=serve ledger row)
+    # ------------------------------------------------------------------
+
+    def prefill_chunk(self, prompt_len: int, *, active_decodes: int,
+                      override: Optional[int] = None) -> Tuple[int, Decision]:
+        """Prefill chunk length for a prompt, from the CostEngine sweep.
+        Families without an exact chunked decode path are pinned to the
+        chunk-1 replay fallback regardless of the sweep."""
+        if not supports_chunked_prefill(self.cfg):
+            candidates: Tuple[int, ...] = (1,)
+        elif override is not None:
+            candidates = (int(override),)
+        else:
+            candidates = self.chunk_candidates
+        dec = self.engine.decide_serve_prefill_chunk(
+            prompt_len, flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes, active_decodes=active_decodes,
+            dtype_bytes=self.dtype_bytes, candidates=candidates)
+        return int(dec.value), dec
+
+    def admission(self, *, active: int, waiting: int,
+                  free_slots: int) -> Tuple[int, Decision]:
+        """How many waiting requests to admit into free slots right now."""
+        dec = self.engine.decide_serve_admission(
+            active, waiting=waiting, free_slots=free_slots,
+            flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes,
+            kv_bytes_per_slot=self.kv_bytes_per_slot,
+            dtype_bytes=self.dtype_bytes)
+        return int(dec.value), dec
+
+    def decode_step(self, batch: int, *, record: bool) -> Decision:
+        """Predicted cost of one decode step at this batch composition.
+        ``record=False`` keeps repeat compositions off the ledger (the
+        measured row the engine attaches per step still lands)."""
+        return self.engine.decide_serve_decode_step(
+            batch, flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes,
+            kv_bytes_per_slot=self.kv_bytes_per_slot,
+            dtype_bytes=self.dtype_bytes, record=record)
+
+    def record_measured(self, decision: Decision, seconds: float,
+                        note: str = "") -> None:
+        self.engine.record_measured(decision, seconds, note=note)

@@ -1,0 +1,89 @@
+"""Slot-pooled decode-state manager for continuous batching.
+
+The pool owns ONE device-resident decode state sized for ``n_slots``
+concurrent requests, with a per-slot cache position (``per_slot=True``
+states).  Requests borrow a slot for their lifetime:
+
+    acquire() -> slot          take the lowest free slot (deterministic)
+    insert(slot, src_state)    splice a freshly-prefilled single-request
+                               state into the pooled caches
+    release(slot)              zero the slot and return it to the free list
+
+``insert`` and ``release`` are jitted once with the slot index / slot mask
+as traced arguments, so admitting or evicting a request never recompiles —
+the fixed-shape decode step keeps running over the whole pool while slots
+turn over underneath it.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+class SlotPool:
+    def __init__(self, model: Model, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.state = model.init_decode_state(n_slots, max_len, per_slot=True)
+        self._insert = jax.jit(model.insert_decode_slot)
+        self._reset = jax.jit(model.reset_decode_slots)
+        self._free: List[int] = list(range(n_slots))
+        self._owner: List[Optional[object]] = [None] * n_slots
+
+    # ------------------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def active_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots) if self._owner[i] is not None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([o is not None for o in self._owner], bool)
+
+    def owner(self, slot: int):
+        return self._owner[slot]
+
+    # ------------------------------------------------------------------
+
+    def acquire(self, owner) -> int:
+        """Take the lowest-numbered free slot for ``owner``."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        self._free.sort()
+        slot = self._free.pop(0)
+        self._owner[slot] = owner
+        return slot
+
+    def insert(self, slot: int, src_state) -> None:
+        """Overwrite slot ``slot`` with a single-request per-slot state."""
+        self.state = self._insert(self.state, src_state, jnp.int32(slot))
+
+    def release(self, slot: int) -> None:
+        """Evict the slot's request: zero its decode state (position 0,
+        empty caches) and return it to the free list."""
+        if self._owner[slot] is None:
+            raise ValueError(f"slot {slot} is not in use")
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slot] = True
+        self.state = self._reset(self.state, jnp.asarray(mask))
+        self._owner[slot] = None
+        self._free.append(slot)
+
+    def positions(self) -> np.ndarray:
+        """Per-slot cache positions (host copy of ``state['pos']``)."""
+        return np.asarray(self.state["pos"])

@@ -100,11 +100,24 @@ def make_train_step(model: Model, loop: TrainLoopConfig, ctx=None) -> Callable:
 
 
 def make_serve_step(model: Model, ctx=None) -> Callable:
-    """One decode step: greedy next token + updated caches."""
+    """One decode step: greedy next token + updated caches.
+
+    When ``batch`` carries an ``active`` (B,) bool mask (continuous
+    batching), inactive slots keep their cache position frozen: their dummy
+    writes land at the frozen position and the whole slot is overwritten by
+    ``insert_decode_slot`` before it is ever read again, so free/retired
+    slots can ride along in the fixed-shape step without re-jitting.
+    """
 
     def serve_fn(params, decode_state, batch):
-        logits, new_state = model.decode_step(params, decode_state, batch, ctx)
+        active = batch.get("active")
+        model_batch = {k: v for k, v in batch.items() if k != "active"}
+        logits, new_state = model.decode_step(params, decode_state, model_batch, ctx)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if active is not None:
+            new_state = dict(new_state)
+            new_state["pos"] = jnp.where(active, new_state["pos"],
+                                         decode_state["pos"])
         return next_tok, new_state
 
     return serve_fn

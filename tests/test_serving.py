@@ -1,0 +1,282 @@
+"""Continuous-batching serving: correctness anchors.
+
+* static-vs-continuous token equivalence (the engine rewrite's invariant),
+  across model families (chunked prefill + the chunk-1 replay fallback),
+  including slot queueing/reuse (n_slots < n_requests)
+* slot reuse after eviction matches a fresh engine (decode-state reset)
+* EOS early-stop + deterministic padding in both engines
+* scheduler decisions land as site=serve overhead-ledger rows
+* explicit max_len validation (no silent slack)
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costs.engine import CostEngine, set_engine
+from repro.models import build_model
+from repro.models.model import mrope_positions
+from repro.serving import (
+    ContinuousServeEngine,
+    Request,
+    ServeEngine,
+    supports_chunked_prefill,
+)
+
+PROMPT_LEN = 7
+MAX_NEW = 9
+MAX_LEN = PROMPT_LEN + MAX_NEW
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cost_engine():
+    set_engine(CostEngine())
+    yield
+    set_engine(None)
+
+
+def _build(arch, key=0, **overrides):
+    cfg = get_config(arch).reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(key))
+    return cfg, model, params
+
+
+def _prompts(cfg, b, p=PROMPT_LEN, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, (b, p)).astype(np.int32)
+
+
+def _run_continuous(model, params, prompts, max_new, *, n_slots, **kw):
+    engine = ContinuousServeEngine(
+        model, params, n_slots=n_slots, max_len=MAX_LEN, eos_id=0, **kw)
+    reqs = [Request(f"r{i}", prompts[i], max_new) for i in range(len(prompts))]
+    report = engine.run(reqs, now_fn=lambda: 0.0)
+    return np.stack([report.output(f"r{i}", max_new)
+                     for i in range(len(prompts))]), report
+
+
+# ---------------------------------------------------------------------------
+# Token-for-token equivalence with the static baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b",       # dense attn -> chunked prefill
+    "qwen2-vl-72b",         # mrope positions through the shared helper
+    "rwkv6-3b",             # recurrent -> chunk-1 replay fallback
+    "recurrentgemma-2b",    # hybrid local ring buffer -> replay fallback
+])
+def test_continuous_matches_static(arch):
+    cfg, model, params = _build(arch)
+    prompts = _prompts(cfg, 3)
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    # n_slots < n_requests: forces queueing and slot reuse after eviction
+    got, _ = _run_continuous(model, params, prompts, MAX_NEW, n_slots=2)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_continuous_matches_static_scan_layout():
+    """Uniform stacks with >= 4 layers store decode state scanned (slot axis
+    1); slot insert/reset must hit the right axis there too."""
+    cfg, model, params = _build("tinyllama-1.1b", n_layers=4)
+    prompts = _prompts(cfg, 3)
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    got, _ = _run_continuous(model, params, prompts, MAX_NEW, n_slots=2)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_chunked_prefill_matches_replay():
+    """Chunked prefill (multi-token chunks through decode_step) must emit
+    the same tokens as the per-token replay it replaces."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 2)
+    replay, _ = _run_continuous(model, params, prompts, MAX_NEW,
+                                n_slots=2, prefill_chunk=1)
+    chunked, _ = _run_continuous(model, params, prompts, MAX_NEW,
+                                 n_slots=2, prefill_chunk=4)
+    np.testing.assert_array_equal(chunked, replay)
+
+
+def test_ragged_prompts_match_single_request_runs():
+    """Per-slot cache positions: requests with different prompt lengths
+    decode concurrently yet match isolated single-request runs."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    rng = np.random.default_rng(3)
+    lens = [4, 7, 10]
+    prompts = [rng.integers(1, cfg.vocab_size, (p,)).astype(np.int32)
+               for p in lens]
+    max_len = max(lens) + MAX_NEW
+    engine = ContinuousServeEngine(model, params, n_slots=3,
+                                   max_len=max_len, eos_id=0)
+    report = engine.run(
+        [Request(f"r{i}", prompts[i], MAX_NEW) for i in range(3)],
+        now_fn=lambda: 0.0)
+    static = ServeEngine(model, params, max_len=max_len, eos_id=0)
+    for i in range(3):
+        expected = static.generate(prompts[i][None], max_new_tokens=MAX_NEW)[0]
+        np.testing.assert_array_equal(report.output(f"r{i}", MAX_NEW), expected)
+
+
+def test_staggered_arrivals_under_pinned_clock():
+    """A frozen test clock with nonzero arrivals must event-skip to the next
+    arrival (not sleep forever), and stay token-identical to the baseline."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 3)
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    engine = ContinuousServeEngine(model, params, n_slots=1,
+                                   max_len=MAX_LEN, eos_id=0)
+    report = engine.run(
+        [Request(f"r{i}", prompts[i], MAX_NEW, arrival_s=0.1 * i)
+         for i in range(3)],
+        now_fn=lambda: 0.0)
+    got = np.stack([report.output(f"r{i}", MAX_NEW) for i in range(3)])
+    np.testing.assert_array_equal(got, expected)
+    assert all(r.ttft_s is not None and r.ttft_s >= 0 for r in report.requests)
+
+
+# ---------------------------------------------------------------------------
+# Slot reuse / reset correctness
+# ---------------------------------------------------------------------------
+
+
+def test_slot_reuse_after_eviction_matches_fresh_engine():
+    """A request served on a recycled slot must see no trace of the evicted
+    one: its output equals the same request on a fresh engine."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 2, seed=7)
+    engine = ContinuousServeEngine(model, params, n_slots=1,
+                                   max_len=MAX_LEN, eos_id=0)
+    report = engine.run(
+        [Request("first", prompts[0], MAX_NEW),
+         Request("reused", prompts[1], MAX_NEW)],
+        now_fn=lambda: 0.0)
+    fresh = ContinuousServeEngine(model, params, n_slots=1,
+                                  max_len=MAX_LEN, eos_id=0)
+    fresh_report = fresh.run([Request("alone", prompts[1], MAX_NEW)],
+                             now_fn=lambda: 0.0)
+    np.testing.assert_array_equal(report.output("reused", MAX_NEW),
+                                  fresh_report.output("alone", MAX_NEW))
+
+
+# ---------------------------------------------------------------------------
+# EOS handling
+# ---------------------------------------------------------------------------
+
+
+def _pick_eos(model, params, prompts, step=3):
+    """Choose as EOS the token the first row actually emits at ``step``
+    (so EOS genuinely triggers mid-generation)."""
+    probe = ServeEngine(model, params, max_len=MAX_LEN, eos_id=-1)
+    base = probe.generate(prompts, max_new_tokens=MAX_NEW)
+    return base, int(base[0, step])
+
+
+def test_static_eos_early_stop_and_padding():
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 2)
+    base, eos = _pick_eos(model, params, prompts)
+    engine = ServeEngine(model, params, max_len=MAX_LEN, eos_id=eos, pad_id=0)
+    out = engine.generate(prompts, max_new_tokens=MAX_NEW)
+    row = out[0]
+    k = int(np.flatnonzero(row == eos)[0])
+    # tokens before EOS match the unconstrained run, EOS kept, rest padded
+    np.testing.assert_array_equal(row[: k + 1], base[0, : k + 1])
+    assert np.all(row[k + 1 :] == 0)
+    # rows that never emit EOS are unchanged
+    if eos not in base[1]:
+        np.testing.assert_array_equal(out[1], base[1])
+
+
+def test_continuous_eos_matches_static():
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 2)
+    _, eos = _pick_eos(model, params, prompts)
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=eos, pad_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    engine = ContinuousServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                                   eos_id=eos, pad_id=0)
+    report = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                         for i in range(2)], now_fn=lambda: 0.0)
+    got = np.stack([report.output(f"r{i}", MAX_NEW) for i in range(2)])
+    np.testing.assert_array_equal(got, expected)
+    # the finished request must have stopped early (freed its slot)
+    finished = next(r for r in report.requests if eos in r.tokens)
+    assert len(finished.tokens) < MAX_NEW or finished.tokens[-1] == eos
+
+
+# ---------------------------------------------------------------------------
+# Scheduler decisions on the overhead ledger
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_has_site_serve_rows():
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 3)
+    engine = CostEngine()
+    set_engine(engine)
+    _run_continuous(model, params, prompts, MAX_NEW, n_slots=2)
+    rows = [e for e in engine.ledger.entries if e.site == "serve"]
+    assert rows, "no site=serve rows in the overhead ledger"
+    ops = {e.query.get("op") for e in rows}
+    assert {"admission", "prefill_chunk", "decode_step"} <= ops
+    measured = [e for e in rows if e.measured_s is not None]
+    assert measured, "no measured wall times attached to serve decisions"
+    # decisions carry real predicted breakdowns
+    assert all(e.predicted_s > 0 for e in rows)
+
+
+def test_prefill_chunk_decision_prefers_replay_only_for_non_attn():
+    from repro.serving.scheduler import ServeScheduler
+
+    engine = CostEngine()
+    attn_cfg = get_config("tinyllama-1.1b").reduced()
+    sched = ServeScheduler(attn_cfg, engine, max_len=MAX_LEN)
+    chunk, dec = sched.prefill_chunk(64, active_decodes=0)
+    assert chunk > 1  # big chunks amortize the weight stream on empty pools
+    assert dec.query.kind == "serve"
+    rwkv_cfg = get_config("rwkv6-3b").reduced()
+    sched_rwkv = ServeScheduler(rwkv_cfg, engine, max_len=MAX_LEN)
+    chunk_rwkv, _ = sched_rwkv.prefill_chunk(64, active_decodes=0)
+    assert chunk_rwkv == 1  # replay fallback is pinned for recurrent decode
+
+
+# ---------------------------------------------------------------------------
+# Explicit max_len validation (the retired "+ 8" slack)
+# ---------------------------------------------------------------------------
+
+
+def test_overflowing_request_errors_clearly():
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 1)
+    static = ServeEngine(model, params, max_len=PROMPT_LEN + 2, eos_id=0)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        static.generate(prompts, max_new_tokens=MAX_NEW)
+    cont = ContinuousServeEngine(model, params, n_slots=1,
+                                 max_len=PROMPT_LEN + 2, eos_id=0)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        cont.run([Request("r0", prompts[0], MAX_NEW)], now_fn=lambda: 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Shared mrope positions helper
+# ---------------------------------------------------------------------------
+
+
+def test_mrope_positions_helper():
+    scalar = np.asarray(mrope_positions(2, 3, 5))
+    assert scalar.shape == (2, 3, 3)
+    np.testing.assert_array_equal(scalar[0, :, 0], [5, 6, 7])
+    np.testing.assert_array_equal(scalar[1], scalar[0])
+    assert (scalar == scalar[..., :1]).all()  # three planes share the index
+    vec = np.asarray(mrope_positions(2, 2, np.array([3, 10], np.int32)))
+    np.testing.assert_array_equal(vec[0, :, 0], [3, 4])
+    np.testing.assert_array_equal(vec[1, :, 0], [10, 11])
