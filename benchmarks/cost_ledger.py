@@ -35,8 +35,14 @@ def _time_matmul(n: int, reps: int = 3) -> float:
     return _timeit(lambda: f(a).block_until_ready(), reps)
 
 
-def run(csv=True):
-    engines = {"v5e": CostEngine(), "calibrated": CostEngine.calibrated()}
+def run(csv=True, runtime=None):
+    from repro.runtime import default_runtime
+
+    rt = runtime if runtime is not None else default_runtime()
+    # two engines side by side: open-loop datasheet constants vs constants
+    # calibrated on this backend (cached under the session's cache_dir)
+    engines = {"v5e": CostEngine(),
+               "calibrated": CostEngine.calibrated(cache_dir=rt.config.cache_dir)}
     rows = []
 
     # crossovers per engine: the calibration-sensitivity of the paper's

@@ -60,12 +60,14 @@ def _record(op, shape, res, warm_res):
     }
 
 
-def run(csv=True):
+def run(csv=True, runtime=None):
     interpret = jax.default_backend() != "tpu"
-    # fresh cache dir per run: every BENCH record is measured THIS run (a
-    # persistent dir would silently re-report stale timings as current)
+    # fresh cache dir per run — deliberately NOT the session's cache: every
+    # BENCH record is measured THIS run (a persistent dir would silently
+    # re-report stale timings as current); tunes still ledger to the session
     cache_dir = tempfile.mkdtemp(prefix="repro-kernels-bench-")
-    tuner = Autotuner(cache_dir=cache_dir, measure=True)
+    ledger = runtime.ledger if runtime is not None else None
+    tuner = Autotuner(cache_dir=cache_dir, measure=True, ledger=ledger)
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     records = []
 

@@ -30,8 +30,11 @@ def _measure_cpu(n: int, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def run(csv=True):
-    engine = CostEngine()  # v5e datasheet constants
+def run(csv=True, runtime=None):
+    from repro.runtime import default_runtime
+
+    rt = runtime if runtime is not None else default_runtime()
+    engine = CostEngine()  # v5e datasheet constants (open-loop baseline)
     om = engine.model
     rows = []
     for n in ORDERS:
@@ -51,7 +54,8 @@ def run(csv=True):
                            for c in CHIPS))
     # crossover per engine: datasheet vs backend-calibrated constants — the
     # paper's hardware-sensitivity point (Yavits/Haque), measured here
-    calibrated = CostEngine.calibrated()
+    # (calibration caches under the session's cache_dir)
+    calibrated = CostEngine.calibrated(cache_dir=rt.config.cache_dir)
     for c in CHIPS:
         xo = engine.matmul_crossover_order(c)
         xo_cal = calibrated.matmul_crossover_order(c)

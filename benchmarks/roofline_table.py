@@ -35,7 +35,7 @@ def render(path: str) -> str:
     return "\n".join(lines)
 
 
-def run(csv=True):
+def run(csv=True, runtime=None):  # runtime unused: renders prior dry-runs
     for p in sorted(Path("results").glob("dryrun_*.json")):
         print(f"=== {p} ===")
         print(render(str(p)))

@@ -16,8 +16,11 @@
                      token-equivalence anchor, site=serve ledger rows);
                      writes the machine-readable BENCH_serving.json
 
-Prints ``name,key=value,...`` CSV lines.  Run:
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Every suite is a thin adapter over the public Runtime API: ``run(csv=True,
+runtime=None)`` receives the session (engine + caches + ledger) from this
+harness (or ``repro.Runtime().bench(...)``).  Prints ``name,key=value,...``
+CSV lines.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--list]
 """
 
 import argparse
@@ -25,12 +28,19 @@ import sys
 import time
 import traceback
 
+# static: --list and --only validation must not import jax-heavy suites
+SUITE_NAMES = (
+    "matmul_crossover",
+    "sort_pivots",
+    "wkv_chunk",
+    "kernels_bench",
+    "roofline_table",
+    "cost_ledger",
+    "serving_bench",
+)
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
 
+def _suites():
     from benchmarks import (
         cost_ledger,
         kernels_bench,
@@ -50,18 +60,52 @@ def main() -> None:
         "cost_ledger": cost_ledger.run,
         "serving_bench": serving_bench.run,
     }
+    assert set(suites) == set(SUITE_NAMES)
+    return suites
+
+
+def run_suites(runtime, only=None):
+    """Run all suites (or just ``only``) against ``runtime``; returns the
+    names of failed suites.  Unknown ``only`` raises KeyError — running
+    zero suites is an error, never a silent success."""
+    suites = _suites()
+    if only is not None:
+        if only not in suites:
+            raise KeyError(
+                f"unknown suite {only!r}; available: {', '.join(SUITE_NAMES)}")
+        suites = {only: suites[only]}
     failed = []
     for name, fn in suites.items():
-        if args.only and name != args.only:
-            continue
         print(f"### {name}")
         t0 = time.time()
         try:
-            fn()
+            fn(runtime=runtime)
             print(f"### {name} done in {time.time() - t0:.1f}s\n")
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"run a single suite; one of: {', '.join(SUITE_NAMES)}")
+    ap.add_argument("--list", action="store_true",
+                    help="list available suites and exit")
+    args = ap.parse_args()
+
+    if args.list:
+        print("\n".join(SUITE_NAMES))
+        return
+    if args.only is not None and args.only not in SUITE_NAMES:
+        ap.error(f"unknown suite {args.only!r}; "
+                 f"available: {', '.join(SUITE_NAMES)}")
+
+    from repro.runtime import Runtime, RuntimeConfig
+
+    runtime = Runtime(RuntimeConfig.from_env())
+    failed = run_suites(runtime, only=args.only)
     if failed:
         print(f"FAILED suites: {failed}")
         sys.exit(1)

@@ -1,5 +1,5 @@
 """Serving benchmark: static-batch vs continuous batching under a staggered
-arrival trace (CPU-reduced config).
+arrival trace (CPU-reduced config) — a thin adapter over ``Runtime.serve``.
 
 Two runs over the same request set:
 
@@ -12,22 +12,21 @@ Reports aggregate tok/s and per-request p50/p95 latency for both, verifies
 the token-for-token equivalence anchor on the shared request set, and
 writes the machine-readable ``BENCH_serving.json``.  Everything runs on the
 prior/analytic path (no measurement loops beyond the trace itself), so the
-suite stays tier-1 fast.
+suite stays tier-1 fast.  The suite builds its OWN Runtime — two sessions
+have isolated ledgers, so the ``site=serve`` rows below are exactly this
+suite's decisions regardless of what the harness ran before.
 """
 
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.costs.engine import CostEngine, get_engine, set_engine
-from repro.launch.serve import emitted_count
 from repro.models import build_model
-from repro.serving import ContinuousServeEngine, Request, ServeEngine
+from repro.runtime import Runtime, synthetic_trace
 
 BENCH_JSON = "BENCH_serving.json"
 
@@ -40,47 +39,39 @@ GAP_MS = 10.0
 
 
 def _trace(cfg, *, staggered: bool):
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab_size, (REQUESTS, PROMPT_LEN)).astype(np.int32)
-    return [
-        Request(f"r{i}", prompts[i], MAX_NEW,
-                arrival_s=(i * GAP_MS / 1e3) if staggered else 0.0)
-        for i in range(REQUESTS)
-    ]
+    return synthetic_trace(
+        REQUESTS, prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+        vocab_size=cfg.vocab_size,
+        arrival="staggered" if staggered else "all",
+        gap_ms=GAP_MS, seed=0)
 
 
-def run() -> None:
-    set_engine(CostEngine())  # fresh ledger so serve rows are this suite's
+def run(csv=True, runtime=None) -> None:
+    rt = Runtime()  # own session => fresh ledger: serve rows are this suite's
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_len = PROMPT_LEN + MAX_NEW
 
     # --- static baseline (batch formed at the last arrival) ---
-    static = ServeEngine(model, params, max_len=max_len, eos_id=0)
-    prompts = np.stack([r.prompt for r in _trace(cfg, staggered=True)])
-    static.generate(prompts, max_new_tokens=1)  # compile outside the clock
-    start = (REQUESTS - 1) * GAP_MS / 1e3
-    t0 = time.perf_counter()
-    static_out = static.generate(prompts, max_new_tokens=MAX_NEW)
-    static_wall = time.perf_counter() - t0
-    static_lat = [start + static_wall - i * GAP_MS / 1e3 for i in range(REQUESTS)]
-    static_toks = emitted_count(static_out, static.eos_id) / static_wall
+    static = rt.serve(cfg, _trace(cfg, staggered=True), mode="static",
+                      model=model, params=params, max_len=max_len, eos_id=0)
 
     # --- continuous batching over the same staggered trace ---
-    cont = ContinuousServeEngine(model, params, n_slots=SLOTS,
-                                 max_len=max_len, eos_id=0)
-    cont.warmup(PROMPT_LEN)
-    report = cont.run(_trace(cfg, staggered=True))
-    pct = report.latency_percentiles()
+    cont = rt.serve(cfg, _trace(cfg, staggered=True), mode="continuous",
+                    model=model, params=params, slots=SLOTS, max_len=max_len,
+                    eos_id=0)
 
-    # --- equivalence anchor on the identical request set ---
-    eq_report = cont.run(_trace(cfg, staggered=False), now_fn=lambda: 0.0)
-    eq_out = np.stack([eq_report.output(f"r{i}", MAX_NEW) for i in range(REQUESTS)])
+    # --- equivalence anchor on the identical request set (same compiled
+    # engine, arrivals pinned to t=0 by the virtual clock) ---
+    eq_report = cont.engine.run(_trace(cfg, staggered=False),
+                                now_fn=lambda: 0.0)
+    static_out = np.stack([static.outputs[f"r{i}"] for i in range(REQUESTS)])
+    eq_out = np.stack([eq_report.output(f"r{i}", MAX_NEW)
+                       for i in range(REQUESTS)])
     token_identical = bool(np.array_equal(static_out, eq_out))
 
-    ledger = get_engine().ledger
-    serve_rows = [e for e in ledger.entries if e.site == "serve"]
+    serve_rows = [e for e in rt.ledger.entries if e.site == "serve"]
     measured = [e for e in serve_rows if e.measured_s is not None]
 
     result = {
@@ -88,17 +79,16 @@ def run() -> None:
         "trace": {"requests": REQUESTS, "prompt_len": PROMPT_LEN,
                   "max_new": MAX_NEW, "slots": SLOTS, "gap_ms": GAP_MS},
         "static": {
-            "tok_per_s": static_toks,
-            "p50_s": float(np.percentile(static_lat, 50)),
-            "p95_s": float(np.percentile(static_lat, 95)),
+            "tok_per_s": static.tok_per_s,
+            "p50_s": static.p50_s,
+            "p95_s": static.p95_s,
         },
         "continuous": {
-            "tok_per_s": report.tok_per_s,
-            "p50_s": pct["p50"],
-            "p95_s": pct["p95"],
+            "tok_per_s": cont.tok_per_s,
+            "p50_s": cont.p50_s,
+            "p95_s": cont.p95_s,
         },
-        "p50_speedup": float(np.percentile(static_lat, 50) / pct["p50"])
-        if pct["p50"] > 0 else None,
+        "p50_speedup": static.p50_s / cont.p50_s if cont.p50_s > 0 else None,
         "token_identical": token_identical,
         "serve_ledger_rows": len(serve_rows),
         "serve_ledger_measured": len(measured),
@@ -106,11 +96,11 @@ def run() -> None:
     with open(BENCH_JSON, "w") as f:
         json.dump(result, f, indent=1)
 
-    print(f"serving_bench,engine=static,tok_s={static_toks:.1f},"
-          f"p50_ms={result['static']['p50_s']*1e3:.1f},"
-          f"p95_ms={result['static']['p95_s']*1e3:.1f}")
-    print(f"serving_bench,engine=continuous,tok_s={report.tok_per_s:.1f},"
-          f"p50_ms={pct['p50']*1e3:.1f},p95_ms={pct['p95']*1e3:.1f}")
+    print(f"serving_bench,engine=static,tok_s={static.tok_per_s:.1f},"
+          f"p50_ms={static.p50_s*1e3:.1f},"
+          f"p95_ms={static.p95_s*1e3:.1f}")
+    print(f"serving_bench,engine=continuous,tok_s={cont.tok_per_s:.1f},"
+          f"p50_ms={cont.p50_s*1e3:.1f},p95_ms={cont.p95_s*1e3:.1f}")
     print(f"serving_bench,token_identical={token_identical},"
           f"serve_rows={len(serve_rows)},measured={len(measured)},"
           f"json={BENCH_JSON}")

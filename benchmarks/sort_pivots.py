@@ -20,8 +20,6 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core import OverheadModel
-
 PAPER_NS = (1000, 1100, 1500, 2000)  # paper Table 3 element counts
 BIG_NS = (100_000, 1_000_000)
 
@@ -43,8 +41,11 @@ print("JSON:" + json.dumps(out))
 """
 
 
-def run(csv=True):
-    om = OverheadModel()
+def run(csv=True, runtime=None):
+    from repro.runtime import default_runtime
+
+    rt = runtime if runtime is not None else default_runtime()
+    om = rt.engine.model  # the session's analytic model (v5e by default)
     rows = []
     # serial measurement (the paper's 'serial' column)
     for n in PAPER_NS + BIG_NS:

@@ -13,15 +13,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import OverheadModel
 from repro.models.rwkv import wkv_chunked
 
 CHUNKS = (16, 32, 64, 128, 256)
 B, S, H, N = 2, 1024, 4, 32
 
 
-def run(csv=True):
-    om = OverheadModel()
+def run(csv=True, runtime=None):
+    from repro.runtime import default_runtime
+
+    rt = runtime if runtime is not None else default_runtime()
+    om = rt.engine.model  # the session's analytic model (v5e by default)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     r = jax.random.normal(ks[0], (B, S, H, N))
     k = jax.random.normal(ks[1], (B, S, H, N))

@@ -11,18 +11,16 @@ Run:  PYTHONPATH=src python examples/adaptive_dispatch.py
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, list_configs
-from repro.core import (
-    adaptive_matmul,
-    analyze_dependencies,
-    decide_matmul,
-    get_engine,
-    plan_model,
-)
+import repro
+from repro.configs import SHAPES
+from repro.core import adaptive_matmul, analyze_dependencies, decide_matmul
 
 
 def main():
-    engine = get_engine()  # REPRO_CALIBRATE=1 calibrates it to this backend
+    # one explicit session; from_env keeps the legacy env-var behavior
+    # (REPRO_CALIBRATE=1 calibrates the engine to this backend)
+    rt = repro.Runtime(repro.RuntimeConfig.from_env())
+    engine = rt.engine
 
     print(f"== crossovers on {engine.hw.name} "
           f"(paper: matmul order ~1000 on multicore CPU) ==")
@@ -42,19 +40,17 @@ def main():
     print(f"  executed 64x32 @ 32x16 serially -> {out.shape}")
 
     print("\n== dependency analysis (work/span) ==")
-    from repro.models import build_model
-
-    cfg = get_config("tinyllama-1.1b").reduced()
-    model = build_model(cfg)
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    model = repro.build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.zeros((2, 32), jnp.int32)}
     rep = analyze_dependencies(lambda p, b: model.loss(p, b)[0], params, batch)
     print(f"  tinyllama loss: {rep.summary()}")
 
     print("\n== overhead-driven sharding plans (16x16 mesh, train_4k) ==")
-    for arch in list_configs():
-        plan = plan_model(get_config(arch), SHAPES["train_4k"],
-                          {"data": 16, "model": 16}, engine=engine)
+    for arch in repro.list_configs():
+        plan = rt.plan(repro.get_config(arch), SHAPES["train_4k"],
+                       {"data": 16, "model": 16})
         print(f"--- {arch}")
         print(plan.summary())
 

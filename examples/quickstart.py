@@ -1,60 +1,56 @@
-"""Quickstart: build an assigned architecture at smoke scale, train a few
-steps, checkpoint, restore, and decode — the whole public API in 60 lines.
+"""Quickstart: the whole public API through one ``import repro``.
+
+Build an assigned architecture at smoke scale, train + checkpoint + resume
+through the Runtime, then serve the trained weights both ways (static
+lockstep baseline vs continuous batching) and verify they agree token for
+token — with every fork-join decision the session made on one ledger.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import tempfile
 
-import jax
 import numpy as np
 
-from repro.checkpoint import latest_step, restore, save
-from repro.configs import get_config, list_configs
-from repro.data import SyntheticLMData
-from repro.models import build_model
-from repro.optim.adamw import AdamWConfig
-from repro.serving import ContinuousServeEngine, Request, ServeEngine
-from repro.training import TrainLoopConfig, init_train_state, make_train_step
+import repro
 
 
 def main():
-    print("assigned architectures:", ", ".join(list_configs()))
-    cfg = get_config("tinyllama-1.1b").reduced()
-    model = build_model(cfg)
+    print("assigned architectures:", ", ".join(repro.list_configs()))
+    rt = repro.Runtime()  # the session: engine + caches + mesh + ledger
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
 
-    # --- train ---
-    loop = TrainLoopConfig(optimizer=AdamWConfig(lr=3e-3), warmup_steps=5,
-                           total_steps=60)
-    state = init_train_state(model, jax.random.PRNGKey(0), loop)
-    ds = SyntheticLMData(cfg, seq_len=32, global_batch=8)
-    step = jax.jit(make_train_step(model, loop))
-    for i in range(30):
-        state, metrics = step(state, ds.batch_at(i))
-        if i % 10 == 0:
-            print(f"step {i:3d} loss {float(metrics['loss']):.4f}")
-
-    # --- checkpoint / restore ---
+    # --- train (the Runtime owns the plan, the loop, and checkpoints) ---
+    loop = repro.TrainLoopConfig(optimizer=repro.AdamWConfig(lr=3e-3),
+                                 warmup_steps=5, total_steps=60)
     with tempfile.TemporaryDirectory() as d:
-        save(d, 30, state)
-        assert latest_step(d) == 30
-        state = restore(d, 30, state)
+        res = rt.train(cfg, loop, steps=30, batch=8, seq=32,
+                       ckpt_dir=d, ckpt_every=30, log_every=10)
+        # --- checkpoint / restore: resuming at the saved step is a no-op
+        resumed = rt.train(cfg, loop, steps=30, batch=8, seq=32,
+                           ckpt_dir=d, resume=True, log_every=0)
+        assert resumed.start_step == 30 and resumed.steps_run == 0
         print("checkpoint roundtrip ok")
+    params = res.state["params"]
 
     # --- serve (static batch; eos_id=-1 keeps the demo un-truncated) ---
-    engine = ServeEngine(model, state["params"], max_len=64, eos_id=-1)
     prompts = np.arange(1, 9, dtype=np.int32).reshape(2, 4)
-    out = engine.generate(prompts, max_new_tokens=8)
-    print("generated:", out.tolist())
+    trace = lambda: [repro.Request(f"r{i}", prompts[i], 8)  # noqa: E731
+                     for i in range(2)]
+    static = rt.serve(cfg, trace(), mode="static", params=params,
+                      max_len=64, eos_id=-1)
+    print("generated:", [static.outputs[f"r{i}"].tolist() for i in range(2)])
 
     # --- serve (continuous batching: slots, chunked prefill, scheduler) ---
-    cont = ContinuousServeEngine(model, state["params"], n_slots=2,
-                                 max_len=64, eos_id=-1)
-    report = cont.run([Request(f"r{i}", prompts[i], 8) for i in range(2)])
-    assert all(np.array_equal(report.output(f"r{i}"), out[i]) for i in range(2))
+    cont = rt.serve(cfg, trace(), mode="continuous", params=params,
+                    slots=2, max_len=64, eos_id=-1)
+    assert all(np.array_equal(cont.outputs[f"r{i}"], static.outputs[f"r{i}"])
+               for i in range(2))
     print(f"continuous batching matched token-for-token "
-          f"({report.generated_tokens} tokens, "
-          f"{report.tok_per_s:.0f} tok/s)")
+          f"({cont.generated_tokens} tokens, {cont.tok_per_s:.0f} tok/s)")
+
+    # --- one session, one ledger: plan + serve decisions, pred-vs-meas ---
+    print(rt.ledger.report(max_rows=8))
 
 
 if __name__ == "__main__":

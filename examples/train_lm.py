@@ -1,5 +1,6 @@
 """End-to-end training driver: train a ~100M-param LM for a few hundred
-steps with checkpointing (deliverable b's end-to-end example).
+steps with checkpointing, through the public Runtime API (deliverable b's
+end-to-end example).
 
 The default preset (``--preset small``, ~25M params) finishes in minutes on
 CPU CI; ``--preset 100m`` is the full deliverable configuration and runs in
@@ -10,17 +11,8 @@ Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
 
 import argparse
 import dataclasses
-import time
 
-import jax
-import numpy as np
-
-from repro.checkpoint import latest_step, restore, save
-from repro.configs import get_config
-from repro.data import SyntheticLMData
-from repro.models import build_model
-from repro.optim.adamw import AdamWConfig
-from repro.training import TrainLoopConfig, init_train_state, make_train_step
+import repro
 
 PRESETS = {
     # (layers, d_model, heads, kv, d_ff, vocab)
@@ -35,47 +27,32 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
     nl, d, h, kv, ff, v = PRESETS[args.preset]
     cfg = dataclasses.replace(
-        get_config("tinyllama-1.1b"),
+        repro.get_config("tinyllama-1.1b"),
         name=f"train-lm-{args.preset}", n_layers=nl, d_model=d, n_heads=h,
         n_kv_heads=kv, head_dim=d // h, d_ff=ff, vocab_size=v, dtype="float32",
         max_seq_len=args.seq,
     )
-    model = build_model(cfg)
     print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
 
-    loop = TrainLoopConfig(
-        optimizer=AdamWConfig(lr=1e-3), warmup_steps=args.steps // 10,
-        total_steps=args.steps,
+    rt = repro.Runtime(repro.RuntimeConfig.from_env())
+    loop = repro.TrainLoopConfig(
+        optimizer=repro.AdamWConfig(lr=1e-3),
+        warmup_steps=args.steps // 10, total_steps=args.steps,
     )
-    ds = SyntheticLMData(cfg, seq_len=args.seq, global_batch=args.batch)
-    state = init_train_state(model, jax.random.PRNGKey(0), loop)
-    start = 0
-    if args.resume:
-        last = latest_step(args.ckpt_dir)
-        if last:
-            state = restore(args.ckpt_dir, last, state)
-            start = last
-            print(f"resumed at {start}")
-
-    step = jax.jit(make_train_step(model, loop))
-    t0 = time.time()
-    for i in range(start, args.steps):
-        state, metrics = step(state, ds.batch_at(i))
-        if i % 25 == 0 or i == args.steps - 1:
-            tok_s = (i - start + 1) * args.batch * args.seq / (time.time() - t0)
-            print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
-                  f"({tok_s:.0f} tok/s)")
-        if (i + 1) % 100 == 0:
-            save(args.ckpt_dir, i + 1, state)
-    save(args.ckpt_dir, args.steps, state)
-    print(f"finished {args.steps - start} steps in {time.time() - t0:.1f}s; "
-          f"checkpoint at {args.ckpt_dir}")
+    res = rt.train(cfg, loop, steps=args.steps, batch=args.batch,
+                   seq=args.seq, seed=args.seed, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=100, resume=args.resume, log_every=25)
+    tok = res.steps_run * args.batch * args.seq
+    tok_s = tok / res.wall_s if res.wall_s > 0 else 0.0
+    print(f"finished {res.steps_run} steps in {res.wall_s:.1f}s "
+          f"({tok_s:.0f} tok/s); checkpoint at {args.ckpt_dir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""repro — overhead-managed parallel execution on a TPU mesh.
+
+The public surface is the :class:`Runtime`: one explicit session object
+owning the CostEngine (the calibratable cost oracle behind every fork-join
+decision), the hardware spec, the calibration + autotune caches, the mesh,
+and the predicted-vs-measured overhead ledger.
+
+    import repro
+
+    rt = repro.Runtime(repro.RuntimeConfig.from_env())
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    result = rt.train(cfg, steps=30, batch=8, seq=32)
+    served = rt.serve(cfg, [repro.Request("r0", prompt, 8)],
+                      params=result.state["params"])
+    print(rt.ledger.report())
+
+Everything in ``__all__`` is the documented, stable API (tested by
+tests/test_runtime.py); attributes resolve lazily so ``import repro`` stays
+light and never initializes jax device state (the dry-run relies on that).
+"""
+
+__version__ = "0.1.0"
+
+__all__ = [
+    # session object + config
+    "Runtime",
+    "RuntimeConfig",
+    "TrainResult",
+    "ServeResult",
+    "default_runtime",
+    "set_default_runtime",
+    "synthetic_trace",
+    # architectures + model construction
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "list_configs",
+    "build_model",
+    # training + serving types
+    "TrainLoopConfig",
+    "AdamWConfig",
+    "Request",
+    "ServeReport",
+    # cost subsystem (the Runtime's internals, exposed for injection)
+    "CostEngine",
+    "CostQuery",
+    "Decision",
+    "OverheadLedger",
+    "OverheadModel",
+    "Autotuner",
+    "HardwareSpec",
+    "V5E",
+]
+
+_EXPORTS = {
+    "Runtime": "repro.runtime",
+    "RuntimeConfig": "repro.runtime",
+    "TrainResult": "repro.runtime",
+    "ServeResult": "repro.runtime",
+    "default_runtime": "repro.runtime",
+    "set_default_runtime": "repro.runtime",
+    "synthetic_trace": "repro.runtime",
+    "ModelConfig": "repro.configs",
+    "ShapeSpec": "repro.configs",
+    "get_config": "repro.configs",
+    "list_configs": "repro.configs",
+    "build_model": "repro.models",
+    "TrainLoopConfig": "repro.training",
+    "AdamWConfig": "repro.optim.adamw",
+    "Request": "repro.serving",
+    "ServeReport": "repro.serving",
+    "CostEngine": "repro.core.costs",
+    "CostQuery": "repro.core.costs",
+    "Decision": "repro.core.costs",
+    "OverheadLedger": "repro.core.costs",
+    "OverheadModel": "repro.core.costs",
+    "Autotuner": "repro.core.costs",
+    "HardwareSpec": "repro.hw",
+    "V5E": "repro.hw",
+}
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

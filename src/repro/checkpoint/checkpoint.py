@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing.
 
-Properties required at 1000+ nodes (DESIGN.md §6):
+Properties required at 1000+ nodes:
 
 * **atomic** — write to ``step_<N>.tmp/``, fsync, rename to ``step_<N>/``;
   a crash mid-write can never corrupt the latest valid checkpoint.

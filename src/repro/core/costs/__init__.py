@@ -4,7 +4,8 @@ model.py       — the analytic overhead model (moved from core/overhead.py)
 calibration.py — microbenchmark the running backend -> calibrated HardwareSpec
                  (JSON cache keyed by backend fingerprint)
 engine.py      — CostEngine: uniform CostQuery -> Decision interface with a
-                 decision cache; process-wide default via get_engine()
+                 decision cache; owned by a repro.Runtime (get_engine() is a
+                 deprecated shim over the default Runtime)
 ledger.py      — predicted-vs-measured overhead ledger (JSON export + table)
 autotune.py    — empirical kernel autotuner: measured block-shape search with
                  the analytic model as prior, fingerprint-keyed cache

@@ -21,9 +21,11 @@ Pipeline (DESIGN.md §4):
                  survives across processes and invalidates when the backend
                  changes
 
-Measurement never runs implicitly: the default tuner measures only when
-``REPRO_AUTOTUNE=1`` (mirroring ``REPRO_CALIBRATE``); otherwise it returns
-the prior, which reproduces the pre-tuner static heuristics exactly.  Every
+Measurement never runs implicitly: a tuner measures only when constructed
+with ``measure=True`` — which ``repro.Runtime`` does when
+``RuntimeConfig.autotune`` is set (``RuntimeConfig.from_env()`` maps the
+legacy ``REPRO_AUTOTUNE=1`` onto it); otherwise the tuner returns the
+prior, which reproduces the pre-tuner static heuristics exactly.  Every
 measured tuning decision lands in the overhead ledger twice — the prior
 config and the tuned config, each with its analytic prediction and measured
 seconds — so ``benchmarks/cost_ledger.py`` can report how far the analytic
@@ -35,9 +37,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-import os
 import statistics
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
@@ -46,7 +48,6 @@ from repro.core.costs.ledger import OverheadLedger
 from repro.core.costs.model import CostBreakdown
 
 _SCHEMA_VERSION = 1
-_MEASURE_ENV = "REPRO_AUTOTUNE"
 
 Config = Dict[str, int]
 
@@ -107,11 +108,11 @@ class TuneResult:
 class Autotuner:
     """Measured block-shape search with a fingerprint-keyed persistent cache.
 
-    ``measure=None`` defers to ``REPRO_AUTOTUNE=1`` (default: prior-only, so
-    importing code paths never pay measurement cost).  ``bench`` overrides
-    the timing hook (tests inject deterministic costs); it receives
-    ``(runner, reps)`` and returns seconds.  ``ledger=None`` records into
-    the process-default CostEngine's ledger.
+    ``measure`` defaults to False (prior-only, so importing code paths
+    never pay measurement cost); ``repro.Runtime`` passes
+    ``RuntimeConfig.autotune``.  ``bench`` overrides the timing hook (tests
+    inject deterministic costs); it receives ``(runner, reps)`` and returns
+    seconds.  ``ledger=None`` records into the default Runtime's ledger.
     """
 
     def __init__(self, *, cache_dir: Optional[Path] = None,
@@ -120,9 +121,7 @@ class Autotuner:
                  ledger: Optional[OverheadLedger] = None,
                  fingerprint: Optional[str] = None,
                  bench: Optional[Callable[[Callable[[], Any], int], float]] = None):
-        if measure is None:
-            measure = os.environ.get(_MEASURE_ENV) == "1"
-        self.measure = measure
+        self.measure = bool(measure)
         self.reps = reps
         self.max_trials = max_trials
         self.ledger = ledger
@@ -277,9 +276,9 @@ class Autotuner:
         how far the analytic model sat from the measured optimum."""
         ledger = self.ledger
         if ledger is None:
-            from repro.core.costs.engine import get_engine
+            from repro.runtime import default_runtime
 
-            ledger = get_engine().ledger
+            ledger = default_runtime().ledger
         query = {"family": spec.family, **dict(spec.query)}
         rows = [("prior", prior_trial)] if prior_trial else []
         rows.append(("tuned", best))
@@ -293,23 +292,35 @@ class Autotuner:
 
 
 # ---------------------------------------------------------------------------
-# Process-wide default tuner (mirrors costs/engine.get_engine)
+# Deprecated shims over the default Runtime (mirrors costs/engine.get_engine)
 # ---------------------------------------------------------------------------
-
-_default_tuner: Optional[Autotuner] = None
 
 
 def get_tuner() -> Autotuner:
-    """Shared default tuner: one memo + one persistent cache per process.
-    Measures only when ``REPRO_AUTOTUNE=1``; otherwise serves cached winners
-    or the analytic prior."""
-    global _default_tuner
-    if _default_tuner is None:
-        _default_tuner = Autotuner()
-    return _default_tuner
+    """Deprecated: the process-default tuner now lives on the default
+    ``repro.Runtime`` (which measures when ``RuntimeConfig.autotune`` —
+    legacy ``REPRO_AUTOTUNE=1`` via ``from_env`` — is set).  Construct a
+    Runtime and pass ``runtime.tuner`` explicitly instead."""
+    warnings.warn(
+        "get_tuner() is deprecated; construct a repro.Runtime (or use "
+        "repro.default_runtime().tuner) and inject the tuner explicitly",
+        DeprecationWarning, stacklevel=2)
+    from repro.runtime import default_runtime
+
+    return default_runtime().tuner
 
 
 def set_tuner(tuner: Optional[Autotuner]) -> None:
-    """Replace (or, with None, reset) the process-wide default tuner."""
-    global _default_tuner
-    _default_tuner = tuner
+    """Deprecated: installs ``tuner`` into the default Runtime (None
+    rebuilds one from the Runtime's config).  Use
+    ``repro.set_default_runtime(Runtime(...))`` instead."""
+    warnings.warn(
+        "set_tuner() is deprecated; use repro.set_default_runtime()",
+        DeprecationWarning, stacklevel=2)
+    from repro.runtime import default_runtime
+
+    rt = default_runtime()
+    if tuner is None:
+        tuner = Autotuner(cache_dir=rt.config.cache_dir,
+                          measure=rt.config.autotune, ledger=rt.ledger)
+    rt.tuner = tuner

@@ -20,8 +20,9 @@ CostEngine — share one calibration instead of re-benchmarking.
 
 Everything here is best-effort: any individual probe failure falls back to
 the base spec's value for that field.  Calibration never runs implicitly;
-the CostEngine only invokes it via ``CostEngine.calibrated()`` or when
-``REPRO_CALIBRATE=1``.
+it only runs via ``CostEngine.calibrated()`` — which ``repro.Runtime``
+invokes when ``RuntimeConfig.calibrate`` is set (legacy
+``REPRO_CALIBRATE=1`` maps onto it via ``RuntimeConfig.from_env``).
 """
 
 from __future__ import annotations
@@ -29,14 +30,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import os
 import time
 from pathlib import Path
 from typing import Optional
 
 from repro.hw import V5E, HardwareSpec
 
-_CACHE_ENV = "REPRO_COST_CACHE"
 _SCHEMA_VERSION = 1
 
 
@@ -56,9 +55,9 @@ def backend_fingerprint() -> str:
 
 
 def default_cache_dir() -> Path:
-    env = os.environ.get(_CACHE_ENV)
-    if env:
-        return Path(env)
+    """Fallback cache home when no cache_dir is injected.  Environment
+    relocation ($REPRO_COST_CACHE) is RuntimeConfig.from_env()'s job — this
+    function deliberately reads nothing from the environment."""
     return Path.home() / ".cache" / "repro" / "calibration"
 
 

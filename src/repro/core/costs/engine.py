@@ -15,16 +15,19 @@ Layering (DESIGN.md §3):
     HardwareSpec — V5E datasheet constants, or a spec calibrated against the
                    running backend (costs/calibration.py)
 
-Call sites either receive an engine explicitly or share the process-wide
-default from ``get_engine()`` — one engine means one ledger and one
-decision cache, so ``benchmarks/run.py`` / the launchers can report every
-decision the process made.
+Call sites receive an engine explicitly — a ``repro.Runtime`` owns exactly
+one, so one session means one ledger and one decision cache and
+``benchmarks/run.py`` / the launchers can report every decision a session
+made.  Call sites that pass nothing fall back to the default Runtime's
+engine (``repro.runtime.default_runtime()``); the ``get_engine()`` /
+``set_engine()`` functions below are deprecated shims over that Runtime,
+kept so pre-Runtime call sites keep working.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import os
+import warnings
 from pathlib import Path
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -407,38 +410,57 @@ class CostEngine:
 
 
 # ---------------------------------------------------------------------------
-# Process-wide default engine
+# Deprecated shims over the default Runtime (repro/runtime.py)
 # ---------------------------------------------------------------------------
-
-_default_engine: Optional[CostEngine] = None
 
 
 def get_engine() -> CostEngine:
-    """The shared default engine (one ledger + decision cache per process).
-    ``REPRO_CALIBRATE=1`` makes it calibrate against the running backend on
-    first use."""
-    global _default_engine
-    if _default_engine is None:
-        if os.environ.get("REPRO_CALIBRATE") == "1":
-            _default_engine = CostEngine.calibrated()
-        else:
-            _default_engine = CostEngine()
-    return _default_engine
+    """Deprecated: the process default now lives on the default
+    ``repro.Runtime`` (built from ``RuntimeConfig.from_env()``, so
+    ``REPRO_CALIBRATE=1`` still calibrates it).  Construct a Runtime and
+    pass ``runtime.engine`` explicitly instead."""
+    warnings.warn(
+        "get_engine() is deprecated; construct a repro.Runtime (or use "
+        "repro.default_runtime().engine) and inject the engine explicitly",
+        DeprecationWarning, stacklevel=2)
+    from repro.runtime import default_runtime
+
+    return default_runtime().engine
 
 
 def set_engine(engine: Optional[CostEngine]) -> None:
-    """Replace (or, with None, reset) the process-wide default engine."""
-    global _default_engine
-    _default_engine = engine
+    """Deprecated: installs ``engine`` into the default Runtime (None
+    resets the default Runtime entirely).  Use
+    ``repro.set_default_runtime(Runtime(...))`` instead."""
+    warnings.warn(
+        "set_engine() is deprecated; use repro.set_default_runtime()",
+        DeprecationWarning, stacklevel=2)
+    from repro import runtime as _runtime
+
+    if engine is None:
+        _runtime.set_default_runtime(None)
+        return
+    rt = _runtime._default_runtime
+    if rt is None:
+        # no default session yet: build one AROUND the injected engine —
+        # never construct (and possibly calibrate) an engine from the
+        # environment just to immediately discard it
+        _runtime.set_default_runtime(_runtime.Runtime(
+            _runtime.RuntimeConfig.from_env(), engine=engine))
+        return
+    rt.engine = engine
+    rt.tuner.ledger = engine.ledger  # one session, one ledger
 
 
 def resolve_engine(engine: Optional[CostEngine] = None,
                    model: Optional[OverheadModel] = None) -> CostEngine:
-    """Back-compat shim for call sites that still pass an OverheadModel:
-    an explicit engine wins; an explicit model gets an ephemeral engine
-    (its decisions still ledger to that engine); else the shared default."""
+    """Injection helper for the decision sites: an explicit engine wins; an
+    explicit OverheadModel gets an ephemeral engine (its decisions still
+    ledger to that engine); else the default Runtime's engine."""
     if engine is not None:
         return engine
     if model is not None:
         return CostEngine(model=model)
-    return get_engine()
+    from repro.runtime import default_runtime
+
+    return default_runtime().engine

@@ -130,6 +130,16 @@ class OverheadLedger:
                 sum(ratios) / len(ratios) if ratios else None,
         }
 
+    def report(self, *, max_rows: int = 40) -> str:
+        """One human-readable report: the summary counts followed by the
+        predicted-vs-measured table — what ``runtime.ledger.report()``
+        prints at the end of a session."""
+        s = self.summary()
+        head = (f"overhead ledger: {s['decisions']} decisions "
+                f"({s['recorded']} recorded, {s['dropped']} dropped), "
+                f"{s['measured']} with measured wall time")
+        return head + "\n" + self.table(max_rows=max_rows)
+
     def table(self, *, measured_only: bool = False, max_rows: int = 40) -> str:
         """Predicted-vs-measured table (the paper's comparative tables,
         closed-loop).  One row per decision."""

@@ -1,6 +1,6 @@
 """Deterministic synthetic data pipeline.
 
-Design for 1000+ nodes (DESIGN.md §6):
+Design for 1000+ nodes:
 
 * **step-indexed determinism** — ``batch_at(step)`` derives every batch from
   ``fold_in(seed, step)``; any host can (re)generate any step.  Restarts,

@@ -49,7 +49,7 @@ class ShardingCtx:
     infer_replicate_params: bool = False
     # the CostEngine whose plan produced this ctx (ledger + decision cache);
     # model code (e.g. MoE dispatch) consults it at trace time.  None ->
-    # call sites fall back to repro.core.costs.get_engine().
+    # call sites fall back to the default Runtime's engine.
     cost_engine: Optional[Any] = None
     # sequence parallelism: shard the residual stream's seq dim over the
     # model axis between layers (beyond-paper memory optimization — the

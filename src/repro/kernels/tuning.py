@@ -28,7 +28,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.costs.autotune import Autotuner, Candidate, TuneResult, TuneSpec, get_tuner
+from repro.core.costs.autotune import Autotuner, Candidate, TuneResult, TuneSpec
 from repro.hw import V5E, HardwareSpec
 
 _BUDGET_FRACTION = 0.5  # leave headroom for the compiler's own buffers
@@ -40,17 +40,23 @@ def vmem_budget(hw: HardwareSpec = V5E) -> int:
 
 
 def _resolve(tuner: Optional[Autotuner]) -> Autotuner:
-    return tuner if tuner is not None else get_tuner()
+    """Injected tuner wins; else the default Runtime's tuner."""
+    if tuner is not None:
+        return tuner
+    from repro.runtime import default_runtime
+
+    return default_runtime().tuner
 
 
 def _resolve_hw(hw: Optional[HardwareSpec]) -> HardwareSpec:
-    """Default to the process CostEngine's spec, so a calibrated engine
-    (REPRO_CALIBRATE=1) also calibrates the tuner's priors + VMEM budget."""
+    """Default to the default Runtime's engine spec, so a calibrated
+    Runtime (RuntimeConfig.calibrate) also calibrates the tuner's priors +
+    VMEM budget."""
     if hw is not None:
         return hw
-    from repro.core.costs.engine import get_engine
+    from repro.runtime import default_runtime
 
-    return get_engine().hw
+    return default_runtime().engine.hw
 
 
 def _peak(hw: HardwareSpec, dtype_bytes: int) -> float:

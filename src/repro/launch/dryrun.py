@@ -41,7 +41,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_configs, shape_applicable
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.core.costs import get_engine
 from repro.core.planner import plan_model
 from repro.data.pipeline import make_batch_specs
 from repro.distributed.sharding import (
@@ -54,6 +53,7 @@ from repro.launch.mesh import data_axes_of, make_production_mesh
 from repro.models import build_model
 from repro.models.common import dtype_of
 from repro.models.transformer import _use_scan, layer_apply, layer_init
+from repro.runtime import Runtime, RuntimeConfig, default_runtime
 from repro.roofline import (
     RooflineTerms,
     collective_bytes_from_hlo,
@@ -295,7 +295,8 @@ def composed_roofline(cfg: ModelConfig, shape: ShapeSpec, mesh, ctx,
 
 
 def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
-                probe: bool = True, verbose: bool = True) -> Dict[str, Any]:
+                probe: bool = True, verbose: bool = True,
+                runtime: Optional[Runtime] = None) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
@@ -306,7 +307,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = data_axes_of(mesh)
-    engine = get_engine()
+    rt = runtime if runtime is not None else default_runtime()
+    engine = rt.engine
     ledger_mark = len(engine.ledger.entries)
     plan = plan_model(cfg, shape, dict(mesh.shape), engine=engine)
     ctx = ShardingCtx(mesh=mesh, data_axes=data_axes,
@@ -422,6 +424,9 @@ def main():
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
+    # one session for the whole sweep: every cell's plan/probe decisions
+    # share one engine (and its decision cache) and one ledger
+    rt = Runtime(RuntimeConfig.from_env())
     jsonl = open(args.out + "l", "a") if args.out else None  # incremental
     results = []
     for arch in archs:
@@ -429,7 +434,7 @@ def main():
             for mp in meshes:
                 try:
                     rec = dryrun_cell(arch, shape, multi_pod=mp,
-                                      probe=not args.no_probe)
+                                      probe=not args.no_probe, runtime=rt)
                 except Exception as e:  # a failing cell is a bug: surface it
                     rec = {"cell": f"{arch}/{shape}/{'multipod' if mp else 'pod'}",
                            "status": "FAILED", "error": f"{type(e).__name__}: {e}",

@@ -1,10 +1,10 @@
-"""Serving launcher: trace-driven continuous batching vs the static baseline.
+"""Serving launcher — a thin CLI adapter over ``repro.Runtime.serve``.
 
-Builds a request trace (all-at-once, staggered, or Poisson arrivals), runs
-it through the chosen engine(s), and reports per-request latency, aggregate
-throughput, and the ``site=serve`` slice of the overhead ledger (every
-admission / prefill-chunk / decode-composition decision, predicted vs
-measured).
+Builds a request trace (all-at-once, staggered, or Poisson arrivals) with
+``repro.synthetic_trace``, runs it through the chosen engine(s), and reports
+per-request latency, aggregate throughput, and the ``site=serve`` slice of
+the Runtime's overhead ledger (every admission / prefill-chunk /
+decode-composition decision, predicted vs measured).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
@@ -16,84 +16,13 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
-from repro.core.costs.engine import get_engine
 from repro.models import build_model
-from repro.serving import ContinuousServeEngine, Request, ServeEngine
-
-
-def build_trace(args, cfg) -> list:
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(
-        1, cfg.vocab_size, (args.requests, args.prompt_len)).astype(np.int32)
-    if args.arrival == "all":
-        arrivals = np.zeros(args.requests)
-    elif args.arrival == "staggered":
-        arrivals = np.arange(args.requests) * (args.gap_ms / 1e3)
-    elif args.arrival == "poisson":
-        gaps = rng.exponential(1.0 / args.rate, args.requests)
-        arrivals = np.cumsum(gaps) - gaps[0]
-    else:
-        raise ValueError(args.arrival)
-    return [Request(f"r{i}", prompts[i], args.max_new, arrival_s=float(arrivals[i]))
-            for i in range(args.requests)]
-
-
-def emitted_count(out: np.ndarray, eos_id: int) -> int:
-    """Tokens actually generated: everything up to and including the first
-    EOS per row (the rest is deterministic padding)."""
-    total = 0
-    for row in out:
-        hits = np.flatnonzero(row == eos_id)
-        total += int(hits[0]) + 1 if hits.size else row.shape[0]
-    return total
-
-
-def run_static(args, model, params, trace):
-    """Static baseline semantics for a trace: wait for the whole batch to
-    arrive, then decode it in lockstep; every request's latency includes
-    the wait for the last arrival."""
-    engine = ServeEngine(model, params, max_len=args.max_len, eos_id=args.eos_id)
-    prompts = np.stack([r.prompt for r in trace])
-    # warm the jit outside the timed window
-    engine.generate(prompts[:, : args.prompt_len], max_new_tokens=1)
-    start = max(r.arrival_s for r in trace)
-    t0 = time.perf_counter()
-    out = engine.generate(prompts, max_new_tokens=args.max_new)
-    wall = time.perf_counter() - t0
-    gen = emitted_count(out, engine.eos_id)
-    lats = [start + wall - r.arrival_s for r in trace]
-    return {
-        "engine": "static",
-        "wall_s": wall,
-        "tok_per_s": gen / wall if wall > 0 else 0.0,
-        "p50": float(np.percentile(lats, 50)),
-        "p95": float(np.percentile(lats, 95)),
-        "outputs": out,
-        "generated_tokens": gen,
-    }
-
-
-def run_continuous(args, model, params, trace):
-    engine = ContinuousServeEngine(
-        model, params, n_slots=args.slots, max_len=args.max_len,
-        eos_id=args.eos_id, prefill_chunk=args.prefill_chunk)
-    engine.warmup(args.prompt_len)
-    report = engine.run(trace)
-    pct = report.latency_percentiles()
-    return {
-        "engine": "continuous",
-        "wall_s": report.wall_s,
-        "tok_per_s": report.tok_per_s,
-        "p50": pct["p50"],
-        "p95": pct["p95"],
-        "report": report,
-    }
+from repro.runtime import Runtime, RuntimeConfig, synthetic_trace
+from repro.serving.engine import emitted_count  # noqa: F401  (re-export)
 
 
 def main(argv=None):
@@ -131,29 +60,39 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    rt = Runtime(RuntimeConfig.from_env())
+    # one model + params shared by both engines (same weights, fair compare)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    results = []
-    if args.engine in ("static", "both"):
-        results.append(run_static(args, model, params, build_trace(args, cfg)))
-    if args.engine in ("continuous", "both"):
-        results.append(run_continuous(args, model, params, build_trace(args, cfg)))
+    def trace():
+        return synthetic_trace(
+            args.requests, prompt_len=args.prompt_len, max_new=args.max_new,
+            vocab_size=cfg.vocab_size, arrival=args.arrival,
+            gap_ms=args.gap_ms, rate=args.rate, seed=args.seed)
+
+    modes = {"static": ("static",), "continuous": ("continuous",),
+             "both": ("static", "continuous")}[args.engine]
+    results = [
+        rt.serve(cfg, trace(), mode=mode, model=model, params=params,
+                 slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
+                 prefill_chunk=args.prefill_chunk)
+        for mode in modes
+    ]
 
     for res in results:
-        print(f"[{res['engine']}] wall {res['wall_s']:.2f}s  "
-              f"{res['tok_per_s']:.1f} tok/s  "
-              f"p50 {res['p50']*1e3:.0f}ms  p95 {res['p95']*1e3:.0f}ms")
-        if "report" in res:
-            for r in res["report"].requests:
+        print(f"[{res.mode}] wall {res.wall_s:.2f}s  "
+              f"{res.tok_per_s:.1f} tok/s  "
+              f"p50 {res.p50_s*1e3:.0f}ms  p95 {res.p95_s*1e3:.0f}ms")
+        if res.report is not None:
+            for r in res.report.requests:
                 print(f"    {r.rid}: arrival {r.arrival_s*1e3:6.0f}ms  "
                       f"queue {r.queue_wait_s*1e3:6.0f}ms  "
                       f"ttft {r.ttft_s*1e3:6.0f}ms  "
                       f"latency {r.latency_s*1e3:6.0f}ms  "
                       f"tokens {len(r.tokens)}")
 
-    ledger = get_engine().ledger
-    serve_rows = [e for e in ledger.entries if e.site == "serve"]
+    serve_rows = [e for e in rt.ledger.entries if e.site == "serve"]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")

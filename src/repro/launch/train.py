@@ -1,9 +1,11 @@
-"""Training launcher.
+"""Training launcher — a thin CLI adapter over ``repro.Runtime.train``.
 
 Smoke-scale on CPU CI; production-shape on a real mesh (the same code path —
-mesh/ctx are injected).  Fault tolerance:
+the Runtime injects the mesh/engine).  Fault tolerance lives in
+``Runtime.train``:
 
-* periodic + SIGTERM-triggered checkpoints (preemption-safe),
+* periodic + SIGTERM-triggered checkpoints (preemption-safe; the launcher
+  wires SIGTERM to the ``should_stop`` hook),
 * --resume restarts from the latest complete checkpoint; the deterministic
   data pipeline replays from the restored step,
 * straggler mitigation: per-step wall-time watchdog logs and (with
@@ -12,7 +14,7 @@ mesh/ctx are injected).  Fault tolerance:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
-      --reduced --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+      --reduced --steps 100 --batch 8 --seq 64 --seed 0 --ckpt-dir /tmp/ckpt
 """
 
 from __future__ import annotations
@@ -20,20 +22,11 @@ from __future__ import annotations
 import argparse
 import signal
 import sys
-import time
 
-import jax
-import numpy as np
-
-from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config
-from repro.configs.base import ShapeSpec
-from repro.core.costs import get_engine
-from repro.core.planner import plan_model
-from repro.data import SyntheticLMData
-from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
-from repro.training import TrainLoopConfig, init_train_state, make_train_step
+from repro.runtime import Runtime, RuntimeConfig
+from repro.training import TrainLoopConfig
 
 
 def main(argv=None):
@@ -45,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for parameter init and the synthetic "
+                    "data stream (runs are reproducible per seed)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compression", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -63,7 +59,6 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg)
     loop = TrainLoopConfig(
         optimizer=AdamWConfig(lr=args.lr),
         warmup_steps=max(args.steps // 20, 1),
@@ -71,72 +66,36 @@ def main(argv=None):
         microbatches=args.microbatches,
         compression=args.compression,
     )
-    # overhead plan for the launch shape — same CostEngine (and ledger) the
-    # trace-time decision sites consult; REPRO_CALIBRATE=1 calibrates it
-    # against this backend first
-    engine = get_engine()
-    shape = ShapeSpec("cli_train", args.seq, args.batch, "train")
-    plan = plan_model(cfg, shape, {"data": jax.device_count(), "model": 1},
-                      engine=engine)
-    if args.report_overheads:
-        print(f"overhead plan ({engine.hw.name}):\n{plan.summary()}")
-
-    ds = SyntheticLMData(cfg, seq_len=args.seq, global_batch=args.batch)
-    state = init_train_state(model, jax.random.PRNGKey(0), loop)
-
-    start = 0
-    if args.resume and args.ckpt_dir:
-        last = latest_step(args.ckpt_dir)
-        if last is not None:
-            state = restore(args.ckpt_dir, last, state)
-            start = int(np.asarray(state["step"]))
-            print(f"resumed from step {start}")
+    # the session: engine + ledger + caches; RuntimeConfig.from_env keeps
+    # the legacy env-var behavior (REPRO_CALIBRATE=1 calibrates it)
+    rt = Runtime(RuntimeConfig.from_env())
 
     # preemption safety: checkpoint on SIGTERM, then exit cleanly
     interrupted = {"flag": False}
+    signal.signal(signal.SIGTERM,
+                  lambda signum, frame: interrupted.update(flag=True))
 
-    def _on_term(signum, frame):
-        interrupted["flag"] = True
-
-    signal.signal(signal.SIGTERM, _on_term)
-
-    step_fn = jax.jit(make_train_step(model, loop))
-    t_start = time.time()
+    on_plan = None
+    if args.report_overheads:
+        on_plan = lambda plan: print(  # noqa: E731
+            f"overhead plan ({rt.hw.name}):\n{plan.summary()}")
     try:
-        return _train_loop(args, model, loop, ds, state, step_fn, start,
-                           t_start, interrupted)
+        res = rt.train(
+            cfg, loop, steps=args.steps, batch=args.batch, seq=args.seq,
+            seed=args.seed, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, resume=args.resume,
+            step_timeout=args.step_timeout, log_every=args.log_every,
+            should_stop=lambda: interrupted["flag"], on_plan=on_plan)
     finally:
         if args.report_overheads:
-            print("cost ledger:\n" + engine.ledger.table())
+            print("cost ledger:\n" + rt.ledger.table())
         if args.ledger_out:
-            engine.ledger.to_json(args.ledger_out)
+            rt.ledger.to_json(args.ledger_out)
             print(f"wrote ledger to {args.ledger_out}")
-
-
-def _train_loop(args, model, loop, ds, state, step_fn, start, t_start,
-                interrupted):
-    for i in range(start, args.steps):
-        t0 = time.time()
-        state, metrics = step_fn(state, ds.batch_at(i))
-        loss = float(metrics["loss"])  # also blocks for the watchdog
-        dt = time.time() - t0
-        if args.step_timeout and dt > args.step_timeout:
-            print(f"[straggler] step {i} took {dt:.2f}s "
-                  f"(> {args.step_timeout}s); continuing")
-        if i % args.log_every == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
-        if not np.isfinite(loss):
-            print("loss is not finite; aborting")
-            return 1
-        if args.ckpt_dir and (
-            interrupted["flag"] or (i + 1) % args.ckpt_every == 0 or i == args.steps - 1
-        ):
-            save(args.ckpt_dir, i + 1, state)
-            if interrupted["flag"]:
-                print(f"SIGTERM: checkpointed step {i + 1}, exiting")
-                return 0
-    print(f"done: {args.steps - start} steps in {time.time() - t_start:.1f}s")
+    if res.diverged:
+        return 1
+    if not res.interrupted:
+        print(f"done: {res.steps_run} steps in {res.wall_s:.1f}s")
     return 0
 
 

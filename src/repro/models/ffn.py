@@ -242,11 +242,13 @@ def moe_apply(params, x, *, top_k: int, activation: str, ctx=None):
     is advisory — the ledger documents the gap instead of hiding it.
     """
     if ctx is not None and ctx.use_ep and ctx.mesh.shape.get(ctx.model_axis, 1) > 1:
-        from repro.core.costs import get_engine
-
         b, s, d = x.shape
         ep = ctx.mesh.shape[ctx.model_axis]
-        engine = getattr(ctx, "cost_engine", None) or get_engine()
+        engine = getattr(ctx, "cost_engine", None)
+        if engine is None:
+            from repro.runtime import default_runtime
+
+            engine = default_runtime().engine
         dec = engine.decide_moe_dispatch(
             max(b // ctx.dp, 1) * s, d, top_k=top_k, ep_shards=ep,
             dtype_bytes=x.dtype.itemsize)

@@ -1,0 +1,432 @@
+"""The public Runtime: one explicit session object owning the CostEngine,
+hardware spec, calibration + autotune caches, mesh, and overhead ledger.
+
+The paper's thesis is that overheads must be managed "to the root level" —
+and the root level of this codebase is the machine model every fork-join
+decision consults.  Yavits et al. and Haque et al. both argue that overhead
+models only pay off when the machine model is an explicit, first-class
+parameter of the algorithm API; a hidden process global is not that.  So the
+patchwork this module replaces — a process-global ``get_engine()``, three
+``REPRO_*`` environment variables, and four launchers each hand-wiring
+config -> planner -> engine -> ledger — becomes one constructed object:
+
+    import repro
+
+    rt = repro.Runtime()                      # datasheet constants
+    rt = repro.Runtime(repro.RuntimeConfig.from_env())   # legacy env vars
+    rt = repro.Runtime(repro.RuntimeConfig(calibrate=True, autotune=True))
+
+    plan   = rt.plan(cfg, shape)              # overhead-driven sharding plan
+    result = rt.train(cfg, loop, steps=100)   # training loop + checkpoints
+    served = rt.serve(cfg, trace)             # continuous-batching serving
+    rt.bench(only="serving_bench")            # benchmark suites
+    print(rt.ledger.report())                 # every decision, pred-vs-meas
+
+Two Runtimes are fully isolated: separate engines, decision caches, tuners
+and ledgers.  Subsystems (dispatch, sort, planner, MoE, serving scheduler,
+kernel tuning) take the engine/tuner by INJECTION; when a caller passes
+none, they fall back to ``default_runtime()`` — a lazily-built Runtime
+configured from the environment, which is also what the deprecated
+``get_engine()`` / ``get_tuner()`` shims delegate to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+import numpy as np
+
+from repro.core.costs.autotune import Autotuner
+from repro.core.costs.engine import CostEngine
+from repro.core.costs.ledger import OverheadLedger
+from repro.hw import V5E, HardwareSpec
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Typed construction parameters for a :class:`Runtime`.
+
+    ``calibrate``  — microbenchmark the running backend into the hardware
+                     spec on construction (was ``REPRO_CALIBRATE=1``).
+    ``autotune``   — let the kernel autotuner measure block-shape candidates
+                     (was ``REPRO_AUTOTUNE=1``); off, it serves cached
+                     winners or the analytic prior.
+    ``cache_dir``  — home of the calibration + autotune JSON caches (was
+                     ``$REPRO_COST_CACHE``; default ``~/.cache/repro/...``).
+    ``hardware``   — base :class:`HardwareSpec` for the analytic model
+                     (default: the TPU-v5e datasheet).  Calibration replaces
+                     measured fields on top of it.
+    ``mesh_shape`` — mesh topology as ``{axis: size}`` (e.g. ``{"data": 8,
+                     "model": 2}``); ``None`` means one data axis over all
+                     visible devices.
+    ``ledger_max_entries`` — overhead-ledger cap (drops are counted).
+    """
+
+    calibrate: bool = False
+    autotune: bool = False
+    cache_dir: Optional[Path] = None
+    hardware: Optional[HardwareSpec] = None
+    mesh_shape: Optional[Dict[str, int]] = None
+    ledger_max_entries: int = 10_000
+
+    @classmethod
+    def from_env(cls, env: Optional[Mapping[str, str]] = None,
+                 **overrides: Any) -> "RuntimeConfig":
+        """The one place the legacy ``REPRO_*`` environment variables are
+        read: ``REPRO_CALIBRATE=1`` -> calibrate, ``REPRO_AUTOTUNE=1`` ->
+        autotune, ``REPRO_COST_CACHE`` -> cache_dir.  Keyword overrides win
+        over the environment."""
+        env = os.environ if env is None else env
+        cache = env.get("REPRO_COST_CACHE")
+        fields: Dict[str, Any] = {
+            "calibrate": env.get("REPRO_CALIBRATE") == "1",
+            "autotune": env.get("REPRO_AUTOTUNE") == "1",
+            "cache_dir": Path(cache) if cache else None,
+        }
+        fields.update(overrides)
+        return cls(**fields)
+
+
+# ---------------------------------------------------------------------------
+# Result records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """What :meth:`Runtime.train` ran and produced."""
+
+    state: Any  # final {"params", "opt", "step", ...} pytree
+    start_step: int
+    steps_run: int
+    wall_s: float
+    final_loss: float
+    plan: Any  # core.planner.Plan for the launch shape
+    diverged: bool = False  # loss went non-finite; loop aborted
+    interrupted: bool = False  # should_stop() fired; checkpointed + exited
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One trace run through :meth:`Runtime.serve` (either mode)."""
+
+    mode: str  # "static" | "continuous"
+    wall_s: float
+    generated_tokens: int
+    tok_per_s: float
+    p50_s: float
+    p95_s: float
+    outputs: Dict[str, np.ndarray]  # rid -> generated tokens
+    report: Any = None  # serving.ServeReport (continuous mode)
+    engine: Any = None  # the serve engine, reusable for follow-up traces
+
+
+def synthetic_trace(n_requests: int, *, prompt_len: int, max_new: int,
+                    vocab_size: int, arrival: str = "staggered",
+                    gap_ms: float = 20.0, rate: float = 50.0,
+                    seed: int = 0) -> List[Any]:
+    """Deterministic request trace (random prompts + an arrival process:
+    ``all`` at t=0, ``staggered`` every ``gap_ms``, or ``poisson`` at
+    ``rate``/s) — the trace builder the serve launcher and benches share."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(
+        1, vocab_size, (n_requests, prompt_len)).astype(np.int32)
+    if arrival == "all":
+        arrivals = np.zeros(n_requests)
+    elif arrival == "staggered":
+        arrivals = np.arange(n_requests) * (gap_ms / 1e3)
+    elif arrival == "poisson":
+        gaps = rng.exponential(1.0 / rate, n_requests)
+        arrivals = np.cumsum(gaps) - gaps[0]
+    else:
+        raise ValueError(f"unknown arrival process: {arrival!r}")
+    return [Request(f"r{i}", prompts[i], max_new, arrival_s=float(arrivals[i]))
+            for i in range(n_requests)]
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+
+class Runtime:
+    """An explicit repro session: engine + tuner + caches + mesh + ledger.
+
+    Construction is cheap unless ``config.calibrate`` is set (then the
+    backend microbenchmarks run once, cached under ``config.cache_dir``).
+    ``engine``/``tuner`` kwargs inject prebuilt components (tests).
+    """
+
+    def __init__(self, config: Optional[RuntimeConfig] = None, *,
+                 engine: Optional[CostEngine] = None,
+                 tuner: Optional[Autotuner] = None):
+        self.config = config if config is not None else RuntimeConfig()
+        if engine is None:
+            ledger = OverheadLedger(self.config.ledger_max_entries)
+            base = self.config.hardware if self.config.hardware is not None else V5E
+            if self.config.calibrate:
+                engine = CostEngine.calibrated(
+                    base, cache_dir=self.config.cache_dir, ledger=ledger)
+            else:
+                engine = CostEngine(hw=base, ledger=ledger)
+        self.engine = engine
+        if tuner is None:
+            tuner = Autotuner(cache_dir=self.config.cache_dir,
+                              measure=self.config.autotune,
+                              ledger=engine.ledger)
+        self.tuner = tuner
+        self._mesh = None
+
+    # ------------------------------------------------------------------
+    # Owned state
+    # ------------------------------------------------------------------
+
+    @property
+    def hw(self) -> HardwareSpec:
+        """The hardware spec the analytic model runs on (calibrated or
+        datasheet)."""
+        return self.engine.hw
+
+    @property
+    def ledger(self) -> OverheadLedger:
+        """THE overhead ledger of this session: every engine decision and
+        every measured tuning lands here."""
+        return self.engine.ledger
+
+    def mesh_shape(self) -> Dict[str, int]:
+        """The configured mesh topology, or one data axis over every
+        visible device."""
+        if self.config.mesh_shape:
+            return dict(self.config.mesh_shape)
+        import jax
+
+        return {"data": jax.device_count(), "model": 1}
+
+    @property
+    def mesh(self):
+        """The jax Mesh for :meth:`mesh_shape` (built lazily; the axis
+        sizes must multiply to the visible device count)."""
+        if self._mesh is None:
+            import jax
+
+            shape = self.mesh_shape()
+            self._mesh = jax.make_mesh(tuple(shape.values()), tuple(shape))
+        return self._mesh
+
+    # ------------------------------------------------------------------
+    # Workloads
+    # ------------------------------------------------------------------
+
+    def plan(self, cfg, shape, mesh_shape: Optional[Dict[str, int]] = None):
+        """Overhead-driven sharding plan for ``cfg`` at ``shape`` on this
+        runtime's engine (every decision ledgered)."""
+        from repro.core.planner import plan_model
+
+        return plan_model(cfg, shape, mesh_shape or self.mesh_shape(),
+                          engine=self.engine)
+
+    def train(self, cfg, loop=None, *, steps: int = 200, batch: int = 8,
+              seq: int = 64, seed: int = 0, ckpt_dir: Optional[str] = None,
+              ckpt_every: int = 50, resume: bool = False,
+              step_timeout: float = 0.0, log_every: int = 10,
+              log: Callable[[str], None] = print,
+              should_stop: Optional[Callable[[], bool]] = None,
+              on_plan: Optional[Callable[[Any], None]] = None) -> TrainResult:
+        """Run the training loop for ``cfg`` at smoke/launch shape.
+
+        ``seed`` drives both parameter init and the synthetic data stream
+        (step-indexed, so ``resume`` replays deterministically).
+        ``should_stop`` is polled once per step; when it fires, the loop
+        checkpoints (if ``ckpt_dir``) and returns with ``interrupted=True``
+        — the hook launchers attach SIGTERM to.  ``on_plan`` sees the
+        overhead plan before the first compile.
+        """
+        import jax
+
+        from repro.checkpoint import latest_step, restore, save
+        from repro.configs.base import ShapeSpec
+        from repro.data import SyntheticLMData
+        from repro.models import build_model
+        from repro.training import (TrainLoopConfig, init_train_state,
+                                    make_train_step)
+
+        if loop is None:
+            loop = TrainLoopConfig(warmup_steps=max(steps // 20, 1),
+                                   total_steps=steps)
+        model = build_model(cfg)
+        plan = self.plan(cfg, ShapeSpec("cli_train", seq, batch, "train"))
+        if on_plan is not None:
+            on_plan(plan)
+
+        ds = SyntheticLMData(cfg, seq_len=seq, global_batch=batch, seed=seed)
+        state = init_train_state(model, jax.random.PRNGKey(seed), loop)
+        start = 0
+        if resume and ckpt_dir:
+            last = latest_step(ckpt_dir)
+            if last is not None:
+                state = restore(ckpt_dir, last, state)
+                start = int(np.asarray(state["step"]))
+                log(f"resumed from step {start}")
+
+        step_fn = jax.jit(make_train_step(model, loop))
+        t_start = time.time()
+        loss = float("nan")
+        for i in range(start, steps):
+            t0 = time.time()
+            state, metrics = step_fn(state, ds.batch_at(i))
+            loss = float(metrics["loss"])  # blocks; also the step watchdog
+            dt = time.time() - t0
+            if step_timeout and dt > step_timeout:
+                log(f"[straggler] step {i} took {dt:.2f}s "
+                    f"(> {step_timeout}s); continuing")
+            if log_every and (i % log_every == 0 or i == steps - 1):
+                log(f"step {i:5d} loss {loss:.4f} "
+                    f"lr {float(metrics['lr']):.2e} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            if not np.isfinite(loss):
+                log("loss is not finite; aborting")
+                return TrainResult(state, start, i + 1 - start,
+                                   time.time() - t_start, loss, plan,
+                                   diverged=True)
+            stop = bool(should_stop is not None and should_stop())
+            if ckpt_dir and (stop or (i + 1) % ckpt_every == 0
+                             or i == steps - 1):
+                save(ckpt_dir, i + 1, state)
+            if stop:
+                log(f"interrupted{': checkpointed' if ckpt_dir else ''} "
+                    f"step {i + 1}, exiting")
+                return TrainResult(state, start, i + 1 - start,
+                                   time.time() - t_start, loss, plan,
+                                   interrupted=True)
+        # a resume past the requested step count runs zero steps, not -N
+        return TrainResult(state, start, max(steps - start, 0),
+                           time.time() - t_start, loss, plan)
+
+    def serve(self, cfg, trace, *, mode: str = "continuous", model=None,
+              params=None, seed: int = 0, slots: int = 4,
+              max_len: Optional[int] = None, eos_id: int = 0,
+              pad_id: Optional[int] = None, prefill_chunk="auto",
+              warmup: bool = True, now_fn=time.perf_counter) -> ServeResult:
+        """Run a request ``trace`` (a list of ``repro.Request``).
+
+        ``continuous`` is the slot-pooled engine scheduled by this runtime's
+        CostEngine (admission / prefill-chunk / decode-composition decisions
+        land as ``site=serve`` ledger rows with measured step times).
+        ``static`` is the lockstep baseline: the batch forms at the last
+        arrival and every request's latency includes that wait; it requires
+        equal-length prompts.  ``params=None`` initializes fresh parameters
+        from ``seed``; ``max_len=None`` sizes slots to the largest
+        prompt+generation in the trace.
+        """
+        import jax
+
+        from repro.models import build_model
+        from repro.serving import ContinuousServeEngine, ServeEngine
+        from repro.serving.engine import emitted_count
+
+        if not trace:
+            raise ValueError("serve() needs a non-empty trace of Requests")
+        if model is None:
+            model = build_model(cfg)
+        if params is None:
+            params = model.init(jax.random.PRNGKey(seed))
+        if max_len is None:
+            max_len = max(r.prompt_len + r.max_new_tokens for r in trace)
+
+        if mode == "static":
+            engine = ServeEngine(model, params, max_len=max_len,
+                                 eos_id=eos_id, pad_id=pad_id)
+            prompts = np.stack([np.asarray(r.prompt, np.int32) for r in trace])
+            max_new = max(r.max_new_tokens for r in trace)
+            if warmup:  # compile outside the timed window
+                engine.generate(prompts, max_new_tokens=1)
+            start = max(r.arrival_s for r in trace)
+            t0 = time.perf_counter()
+            out = engine.generate(prompts, max_new_tokens=max_new)
+            wall = time.perf_counter() - t0
+            # lockstep decodes to the longest budget; each request only
+            # keeps (and is only credited for) its own max_new_tokens
+            outputs = {r.rid: out[i, :r.max_new_tokens]
+                       for i, r in enumerate(trace)}
+            gen = sum(emitted_count(row[None], engine.eos_id)
+                      for row in outputs.values())
+            lats = [start + wall - r.arrival_s for r in trace]
+            return ServeResult(
+                "static", wall, gen, gen / wall if wall > 0 else 0.0,
+                float(np.percentile(lats, 50)), float(np.percentile(lats, 95)),
+                outputs, engine=engine)
+
+        if mode == "continuous":
+            engine = ContinuousServeEngine(
+                model, params, n_slots=slots, max_len=max_len, eos_id=eos_id,
+                pad_id=pad_id, cost_engine=self.engine,
+                prefill_chunk=prefill_chunk)
+            if warmup:
+                engine.warmup(min(r.prompt_len for r in trace))
+            report = engine.run(trace, now_fn=now_fn)
+            pct = report.latency_percentiles()
+            return ServeResult(
+                "continuous", report.wall_s, report.generated_tokens,
+                report.tok_per_s, pct["p50"], pct["p95"], report.outputs(),
+                report=report, engine=engine)
+
+        raise ValueError(f"unknown serve mode: {mode!r}")
+
+    def bench(self, only: Optional[str] = None) -> List[str]:
+        """Run the benchmark suites against this runtime (all of them, or
+        just ``only``).  Returns the names of failed suites.  Needs the
+        repo-root ``benchmarks/`` package on the path."""
+        try:
+            from benchmarks.run import run_suites
+        except ImportError as exc:
+            raise ImportError(
+                "benchmarks/ is not importable — run from the repo root "
+                "(the benchmarks package is not installed with repro)"
+            ) from exc
+        return run_suites(self, only=only)
+
+    def dryrun(self, arch: str, shape: str, *, multi_pod: bool = False,
+               probe: bool = True, verbose: bool = True) -> Dict[str, Any]:
+        """Lower + compile one production-mesh cell on this runtime's
+        engine.  NOTE: the dry-run forces 512 placeholder devices via
+        XLA_FLAGS at module import, so it must run in a process where jax
+        has not initialized yet (see launch/dryrun.py)."""
+        from repro.launch.dryrun import dryrun_cell
+
+        return dryrun_cell(arch, shape, multi_pod=multi_pod, probe=probe,
+                           verbose=verbose, runtime=self)
+
+
+# ---------------------------------------------------------------------------
+# The default Runtime (what the deprecated shims delegate to)
+# ---------------------------------------------------------------------------
+
+_default_runtime: Optional[Runtime] = None
+
+
+def default_runtime() -> Runtime:
+    """The process-default Runtime, built lazily from the environment
+    (``RuntimeConfig.from_env()``) — the injection fallback for call sites
+    that pass no engine/tuner, and the target of the deprecated
+    ``get_engine()`` / ``get_tuner()`` shims."""
+    global _default_runtime
+    if _default_runtime is None:
+        _default_runtime = Runtime(RuntimeConfig.from_env())
+    return _default_runtime
+
+
+def set_default_runtime(runtime: Optional[Runtime]) -> None:
+    """Replace (or, with None, reset) the process-default Runtime."""
+    global _default_runtime
+    _default_runtime = runtime

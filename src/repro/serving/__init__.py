@@ -11,6 +11,7 @@ from repro.serving.engine import (  # noqa: F401
     ContinuousServeEngine,
     ServeEngine,
     ServeReport,
+    emitted_count,
 )
 from repro.serving.scheduler import (  # noqa: F401
     Request,

@@ -32,6 +32,17 @@ from repro.serving.slots import SlotPool
 from repro.training.step import make_serve_step
 
 
+def emitted_count(out: np.ndarray, eos_id: int) -> int:
+    """Tokens actually generated in a (B, T) output matrix: everything up
+    to and including the first EOS per row (the rest is deterministic
+    padding)."""
+    total = 0
+    for row in out:
+        hits = np.flatnonzero(row == eos_id)
+        total += int(hits[0]) + 1 if hits.size else row.shape[0]
+    return total
+
+
 def _check_fits(prompt_len: int, max_new: int, max_len: int, who: str) -> None:
     """One explicit slot-capacity rule instead of the old silent ``+ 8``
     slack: a request must fit its slot end to end."""

@@ -149,7 +149,8 @@ def test_measured_tune_records_prior_and_tuned_ledger_rows(tmp_path):
 def test_default_tuner_is_prior_only(monkeypatch):
     monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
     assert Autotuner().measure is False
-    assert isinstance(get_tuner(), Autotuner)
+    with pytest.warns(DeprecationWarning):  # the back-compat shim
+        assert isinstance(get_tuner(), Autotuner)
 
 
 # ---------------------------------------------------------------------------

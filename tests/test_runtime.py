@@ -1,0 +1,328 @@
+"""Public API surface + Runtime semantics.
+
+* the import surface: ``repro.__all__`` is exactly the documented API and
+  every name resolves,
+* session isolation: two Runtimes have separate engines, decision caches,
+  tuners and ledgers,
+* ``RuntimeConfig.from_env()`` reproduces the legacy env-var behavior
+  (REPRO_CALIBRATE / REPRO_AUTOTUNE / REPRO_COST_CACHE),
+* the deprecated ``get_engine()`` / ``set_engine()`` / ``get_tuner()``
+  shims delegate to the default Runtime and warn, while the injection
+  fallback (``resolve_engine``) stays warning-free,
+* ``Runtime.plan`` / ``Runtime.serve`` run the workloads end to end on the
+  session's engine.
+"""
+
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro.runtime import (
+    Runtime,
+    RuntimeConfig,
+    default_runtime,
+    set_default_runtime,
+    synthetic_trace,
+)
+
+# The documented stable surface.  Changing it is an API decision: update
+# repro/__init__.py, DESIGN.md §6 and this list together.
+DOCUMENTED_API = [
+    "Runtime",
+    "RuntimeConfig",
+    "TrainResult",
+    "ServeResult",
+    "default_runtime",
+    "set_default_runtime",
+    "synthetic_trace",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "list_configs",
+    "build_model",
+    "TrainLoopConfig",
+    "AdamWConfig",
+    "Request",
+    "ServeReport",
+    "CostEngine",
+    "CostQuery",
+    "Decision",
+    "OverheadLedger",
+    "OverheadModel",
+    "Autotuner",
+    "HardwareSpec",
+    "V5E",
+]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_runtime():
+    set_default_runtime(None)
+    yield
+    set_default_runtime(None)
+
+
+# ---------------------------------------------------------------------------
+# Import surface
+# ---------------------------------------------------------------------------
+
+
+def test_public_surface_is_exactly_the_documented_api():
+    assert sorted(repro.__all__) == sorted(DOCUMENTED_API)
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+
+
+def test_lazy_exports_are_cached_and_unknown_names_raise():
+    assert repro.CostEngine is repro.CostEngine  # resolved once, cached
+    with pytest.raises(AttributeError, match="no attribute"):
+        repro.not_part_of_the_api
+
+
+# ---------------------------------------------------------------------------
+# Session isolation
+# ---------------------------------------------------------------------------
+
+
+def test_two_runtimes_have_isolated_engines_ledgers_and_tuners():
+    rt1, rt2 = Runtime(), Runtime()
+    assert rt1.engine is not rt2.engine
+    assert rt1.ledger is not rt2.ledger
+    assert rt1.tuner is not rt2.tuner
+    rt1.engine.decide_matmul(512, 512, 512, chips=8)
+    assert len(rt1.ledger.entries) == 1 and rt1.engine.cache_stats()["size"] == 1
+    assert len(rt2.ledger.entries) == 0 and rt2.engine.cache_stats()["size"] == 0
+    # one session, ONE ledger: the tuner records into the engine's ledger
+    assert rt1.tuner.ledger is rt1.ledger
+
+
+def test_runtime_config_wires_cache_dir_hardware_and_autotune(tmp_path):
+    spec = repro.V5E
+    rt = Runtime(RuntimeConfig(autotune=True, cache_dir=tmp_path,
+                               hardware=spec, ledger_max_entries=7))
+    assert rt.tuner.measure is True
+    assert rt.tuner.cache_dir == tmp_path
+    assert rt.hw is spec
+    assert rt.ledger.max_entries == 7
+    # default: no measurement, datasheet constants
+    rt0 = Runtime()
+    assert rt0.tuner.measure is False and rt0.hw.name == "tpu-v5e"
+
+
+def test_calibrated_runtime_uses_backend_constants(tmp_path):
+    rt = Runtime(RuntimeConfig(calibrate=True, cache_dir=tmp_path))
+    assert rt.hw.name.startswith("calibrated-")
+    assert rt.engine.calibration is not None
+    # second construction hits the fingerprint-keyed cache
+    rt2 = Runtime(RuntimeConfig(calibrate=True, cache_dir=tmp_path))
+    assert rt2.engine.calibration.from_cache
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig.from_env == legacy env-var behavior
+# ---------------------------------------------------------------------------
+
+
+def test_from_env_defaults_match_unset_legacy_env(monkeypatch):
+    for var in ("REPRO_CALIBRATE", "REPRO_AUTOTUNE", "REPRO_COST_CACHE"):
+        monkeypatch.delenv(var, raising=False)
+    cfg = RuntimeConfig.from_env()
+    assert cfg == RuntimeConfig()
+
+
+def test_from_env_reads_the_three_legacy_vars(monkeypatch):
+    monkeypatch.setenv("REPRO_CALIBRATE", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_COST_CACHE", "/tmp/repro-env-cache")
+    cfg = RuntimeConfig.from_env()
+    assert cfg.calibrate is True
+    assert cfg.autotune is True
+    assert cfg.cache_dir == Path("/tmp/repro-env-cache")
+    # legacy semantics: only the literal "1" enables a flag
+    monkeypatch.setenv("REPRO_CALIBRATE", "0")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "true")
+    cfg = RuntimeConfig.from_env()
+    assert cfg.calibrate is False and cfg.autotune is False
+
+
+def test_from_env_accepts_explicit_mapping_and_overrides():
+    env = {"REPRO_AUTOTUNE": "1"}
+    assert RuntimeConfig.from_env(env).autotune is True
+    assert RuntimeConfig.from_env(env, autotune=False).autotune is False
+
+
+def test_default_runtime_is_built_from_env(monkeypatch, tmp_path):
+    monkeypatch.delenv("REPRO_CALIBRATE", raising=False)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_COST_CACHE", str(tmp_path))
+    set_default_runtime(None)
+    rt = default_runtime()
+    assert rt.tuner.measure is True
+    assert rt.tuner.cache_dir == tmp_path
+    assert default_runtime() is rt  # singleton until reset
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims delegate to the default Runtime
+# ---------------------------------------------------------------------------
+
+
+def test_get_engine_shim_delegates_and_warns():
+    from repro.core.costs.engine import get_engine
+
+    with pytest.warns(DeprecationWarning, match="get_engine"):
+        eng = get_engine()
+    assert eng is default_runtime().engine
+    with pytest.warns(DeprecationWarning):
+        assert get_engine() is eng
+
+
+def test_set_engine_shim_installs_into_default_runtime():
+    from repro.core.costs.engine import CostEngine, set_engine
+
+    eng = CostEngine()
+    with pytest.warns(DeprecationWarning, match="set_engine"):
+        set_engine(eng)
+    rt = default_runtime()
+    assert rt.engine is eng
+    assert rt.ledger is eng.ledger
+    assert rt.tuner.ledger is eng.ledger
+    with pytest.warns(DeprecationWarning):
+        set_engine(None)  # resets the default Runtime entirely
+    assert default_runtime().engine is not eng
+
+
+def test_set_engine_shim_never_calibrates_a_discarded_engine(monkeypatch):
+    """With no default session yet, set_engine must build the session
+    AROUND the injected engine — not construct (and under
+    REPRO_CALIBRATE=1, calibrate) an env engine just to throw it away."""
+    from repro.core.costs import engine as engine_mod
+
+    monkeypatch.setenv("REPRO_CALIBRATE", "1")
+    monkeypatch.setattr(
+        engine_mod.CostEngine, "calibrated",
+        classmethod(lambda *a, **k: pytest.fail("calibration must not run")))
+    eng = engine_mod.CostEngine()
+    with pytest.warns(DeprecationWarning):
+        engine_mod.set_engine(eng)
+    assert default_runtime().engine is eng
+    assert default_runtime().tuner.ledger is eng.ledger
+
+
+def test_get_tuner_shim_delegates_and_warns():
+    from repro.core.costs.autotune import get_tuner
+
+    with pytest.warns(DeprecationWarning, match="get_tuner"):
+        assert get_tuner() is default_runtime().tuner
+
+
+def test_injection_fallbacks_do_not_warn():
+    """Subsystems reaching the default Runtime by fallback (not via the
+    deprecated shims) must stay warning-free."""
+    from repro.core.costs.engine import resolve_engine
+    from repro.kernels import tuning
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert resolve_engine() is default_runtime().engine
+        assert tuning._resolve(None) is default_runtime().tuner
+        assert tuning._resolve_hw(None) is default_runtime().engine.hw
+
+
+# ---------------------------------------------------------------------------
+# Workload methods
+# ---------------------------------------------------------------------------
+
+
+def test_plan_runs_on_the_session_engine():
+    rt = Runtime()
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    plan = rt.plan(cfg, repro.ShapeSpec("t", 128, 8, "train"),
+                   {"data": 2, "model": 4})
+    assert plan.decisions and plan.fits_hbm
+    sites = {e.site for e in rt.ledger.entries}
+    assert "layer_shard" in sites
+
+
+def test_serve_static_and_continuous_agree_token_for_token():
+    rt = Runtime()
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    trace = synthetic_trace(3, prompt_len=5, max_new=6,
+                            vocab_size=cfg.vocab_size, arrival="all", seed=1)
+    static = rt.serve(cfg, trace, mode="static", seed=0, eos_id=0)
+    trace2 = synthetic_trace(3, prompt_len=5, max_new=6,
+                             vocab_size=cfg.vocab_size, arrival="all", seed=1)
+    cont = rt.serve(cfg, trace2, mode="continuous", seed=0, slots=2,
+                    eos_id=0, now_fn=lambda: 0.0)
+    for rid in static.outputs:
+        np.testing.assert_array_equal(static.outputs[rid], cont.outputs[rid])
+    assert cont.report is not None and cont.generated_tokens > 0
+    assert any(e.site == "serve" for e in rt.ledger.entries)
+    with pytest.raises(ValueError, match="unknown serve mode"):
+        rt.serve(cfg, trace, mode="batch")
+    with pytest.raises(ValueError, match="non-empty trace"):
+        rt.serve(cfg, [])
+
+
+def test_synthetic_trace_arrival_processes():
+    tr = synthetic_trace(4, prompt_len=3, max_new=2, vocab_size=100,
+                         arrival="staggered", gap_ms=10.0)
+    assert [r.arrival_s for r in tr] == pytest.approx([0.0, 0.01, 0.02, 0.03])
+    tr = synthetic_trace(4, prompt_len=3, max_new=2, vocab_size=100,
+                         arrival="poisson", rate=100.0)
+    assert tr[0].arrival_s == 0.0
+    assert all(b.arrival_s >= a.arrival_s for a, b in zip(tr, tr[1:]))
+    with pytest.raises(ValueError, match="arrival"):
+        synthetic_trace(1, prompt_len=1, max_new=1, vocab_size=10,
+                        arrival="burst")
+
+
+def test_runtime_mesh_builds_lazily_from_config():
+    rt = Runtime(RuntimeConfig(mesh_shape={"data": 1, "model": 1}))
+    mesh = rt.mesh
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+    assert rt.mesh is mesh  # built once, cached
+    assert Runtime().mesh_shape()["model"] == 1  # default: data over devices
+
+
+def test_train_should_stop_interrupts_even_without_ckpt_dir():
+    rt = Runtime()
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    res = rt.train(cfg, steps=5, batch=2, seq=16, log_every=0,
+                   should_stop=lambda: True)
+    assert res.interrupted and res.steps_run == 1 and not res.diverged
+
+
+def test_train_resume_past_requested_steps_runs_zero(tmp_path):
+    rt = Runtime()
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    first = rt.train(cfg, steps=2, batch=2, seq=16, log_every=0,
+                     ckpt_dir=str(tmp_path))
+    assert first.steps_run == 2
+    back = rt.train(cfg, steps=1, batch=2, seq=16, log_every=0,
+                    ckpt_dir=str(tmp_path), resume=True)
+    assert back.start_step == 2 and back.steps_run == 0
+    assert not back.diverged and not back.interrupted
+
+
+def test_serve_static_respects_per_request_budgets():
+    rt = Runtime()
+    cfg = repro.get_config("tinyllama-1.1b").reduced()
+    prompts = np.arange(1, 11, dtype=np.int32).reshape(2, 5)
+    trace = [repro.Request("a", prompts[0], 2),
+             repro.Request("b", prompts[1], 6)]
+    res = rt.serve(cfg, trace, mode="static", eos_id=-1, max_len=16)
+    assert res.outputs["a"].shape == (2,)
+    assert res.outputs["b"].shape == (6,)
+    assert res.generated_tokens == 8  # 2 + 6, not 2 * max(budgets)
+
+
+def test_ledger_report_renders():
+    rt = Runtime()
+    rt.engine.decide_sort(1000, chips=1)
+    text = rt.ledger.report()
+    assert "overhead ledger: 1 decisions" in text
+    assert "sort" in text

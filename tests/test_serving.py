@@ -16,9 +16,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.costs.engine import CostEngine, set_engine
+from repro.core.costs.engine import CostEngine
 from repro.models import build_model
 from repro.models.model import mrope_positions
+from repro.runtime import Runtime, set_default_runtime
 from repro.serving import (
     ContinuousServeEngine,
     Request,
@@ -32,10 +33,12 @@ MAX_LEN = PROMPT_LEN + MAX_NEW
 
 
 @pytest.fixture(autouse=True)
-def _fresh_cost_engine():
-    set_engine(CostEngine())
+def _fresh_runtime():
+    # each test gets its own session (isolated engine + ledger); engines
+    # that are not passed one explicitly fall back to this default Runtime
+    set_default_runtime(Runtime())
     yield
-    set_engine(None)
+    set_default_runtime(None)
 
 
 def _build(arch, key=0, **overrides):
@@ -221,10 +224,10 @@ def test_continuous_eos_matches_static():
 def test_ledger_has_site_serve_rows():
     cfg, model, params = _build("tinyllama-1.1b")
     prompts = _prompts(cfg, 3)
-    engine = CostEngine()
-    set_engine(engine)
+    rt = Runtime()
+    set_default_runtime(rt)
     _run_continuous(model, params, prompts, MAX_NEW, n_slots=2)
-    rows = [e for e in engine.ledger.entries if e.site == "serve"]
+    rows = [e for e in rt.ledger.entries if e.site == "serve"]
     assert rows, "no site=serve rows in the overhead ledger"
     ops = {e.query.get("op") for e in rows}
     assert {"admission", "prefill_chunk", "decode_step"} <= ops
