@@ -9,6 +9,7 @@ CPU backend, an interpret-mode Pallas run, a different TPU generation.
 ``calibrate()`` measures, on whatever backend jax is using right now:
 
   * kernel launch latency      — dispatch of a trivial jitted program
+  * host-sync latency          — device->host fetch of a tiny ready buffer
   * effective memory bandwidth — large-array copy traffic / wall time
   * matmul throughput          — FLOP/s at a well-tiled order, per dtype
   * collective base latency    — tiny psum under a mesh (multi-device only)
@@ -109,6 +110,20 @@ def _measure_matmul_flops(order: int = 1024, reps: int = 3,
     return 2.0 * order**3 / max(dt, 1e-9)
 
 
+def _measure_host_sync(reps: int = 50) -> float:
+    """Wall time of one device->host round trip on a tiny READY buffer —
+    the per-token tax the serve macro-step amortizes over K tokens.  The
+    buffer is materialized and synchronized up front so the probe times the
+    transfer + host bookkeeping, not the compute it waits on."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    y = jax.jit(lambda x: x + 1.0)(jnp.zeros((8,), jnp.float32))
+    y.block_until_ready()
+    return _timeit(lambda: np.asarray(y), reps)
+
+
 def _measure_collective_base(reps: int = 20) -> Optional[float]:
     """Base latency of a tiny all-reduce; None on single-device backends."""
     import jax
@@ -152,6 +167,7 @@ def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
             probes[name] = None
 
     attempt("kernel_launch_s", _measure_launch_latency)
+    attempt("host_sync_s", _measure_host_sync)
     attempt("hbm_bw", _measure_memory_bw)
     attempt("peak_flops_f32",
             lambda: _measure_matmul_flops(matmul_order, dtype="float32"))
@@ -210,6 +226,12 @@ def load_calibration(path: Path, *, fingerprint: Optional[str] = None
     if payload.get("schema") != _SCHEMA_VERSION:
         return None
     if fingerprint is not None and payload.get("fingerprint") != fingerprint:
+        return None
+    # a cache written before a HardwareSpec field existed would silently
+    # pin that field to its datasheet default forever — re-calibrate instead
+    missing = {f.name for f in dataclasses.fields(HardwareSpec)} - set(
+        payload.get("spec", {}))
+    if missing:
         return None
     return {"spec": HardwareSpec.from_dict(payload["spec"]),
             "measurements": payload.get("measurements", {})}

@@ -45,7 +45,8 @@ from repro.hw import V5E, HardwareSpec
 class CostQuery:
     """Hashable description of one fork-join decision problem.
 
-    ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard | serve.
+    ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard |
+    serve | serve_macro.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -324,8 +325,42 @@ class CostEngine:
                             alternatives=(step, sequential), value=batch)
         raise ValueError(f"unknown serve op: {op!r}")
 
+    def _solve_serve_macro(self, q: CostQuery) -> Decision:
+        """Decode macro-step horizon (site=serve_macro ledger rows).
+
+        shape=(batch,); params: remaining (sorted per-slot budget tuple),
+        candidates, flops_per_token, weight_bytes, kv_bytes_per_slot.
+        Chooses the K minimizing predicted seconds PER USEFUL TOKEN: one
+        host sync per macro-step amortizes over K tokens, but slots that
+        finish mid-macro-step waste lockstep steps (``serve_macro_cost``).
+        Baseline = K=1, today's one-sync-per-token loop.  The engine
+        attaches measured per-macro-step wall times to these rows.
+        """
+        (batch,) = q.shape
+        remaining = tuple(q.param("remaining", ()))
+        fpt = float(q.param("flops_per_token", 0.0))
+        wb = float(q.param("weight_bytes", 0.0))
+        kvb = float(q.param("kv_bytes_per_slot", 0.0))
+        seen, cands = set(), []
+        for k in q.param("candidates", (1, 2, 4, 8)):
+            # candidates are taken as given: the scheduler filters the auto
+            # set by max remaining, and a pinned override must stay pinned
+            # (clamping would jit-compile ad-hoc horizons mid-trace)
+            k = max(1, int(k))
+            if k in seen:
+                continue
+            seen.add(k)
+            cands.append(self.model.serve_macro_cost(
+                k, remaining, flops_per_token=fpt, weight_bytes=wb,
+                kv_bytes_per_slot=kvb, dtype_bytes=q.dtype_bytes))
+        baseline = next((cb for cb in cands if cb.strategy == "K_1"), cands[0])
+        best = min(cands, key=lambda cb: cb.total)
+        return Decision(q, best.strategy, best, baseline=baseline,
+                        alternatives=tuple(cands),
+                        value=int(best.strategy.split("_")[1]))
+
     # ------------------------------------------------------------------
-    # Convenience wrappers (the six decision sites)
+    # Convenience wrappers (the decision sites)
     # ------------------------------------------------------------------
 
     def decide_matmul(self, m: int, n: int, k: int, *, chips: int,
@@ -390,6 +425,25 @@ class CostEngine:
                                  record: bool = True) -> Decision:
         return self.query(CostQuery.make(
             "serve", (batch,), dtype_bytes=dtype_bytes, op="decode_step",
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_slot=int(kv_bytes_per_slot)), record=record)
+
+    def decide_serve_macro(self, batch: int, *, remaining: Sequence[int],
+                           flops_per_token: float, weight_bytes: float,
+                           kv_bytes_per_slot: float = 0, dtype_bytes: int = 2,
+                           candidates: Sequence[int] = (1, 2, 4, 8),
+                           record: bool = True) -> Decision:
+        # clip budgets at the largest candidate before building the query:
+        # min(K, r) is identical for every candidate K once r >= max(K), so
+        # this is lossless — and it keeps the memoized decision cache
+        # bounded instead of growing with every distinct budget tuple a
+        # long-running server decrements through
+        cap = max(candidates)
+        return self.query(CostQuery.make(
+            "serve_macro", (batch,), dtype_bytes=dtype_bytes,
+            remaining=tuple(sorted(min(int(r), cap) for r in remaining)),
+            candidates=tuple(candidates),
             flops_per_token=int(flops_per_token),
             weight_bytes=int(weight_bytes),
             kv_bytes_per_slot=int(kv_bytes_per_slot)), record=record)

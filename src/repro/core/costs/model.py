@@ -290,6 +290,38 @@ class OverheadModel:
         return CostBreakdown(f"decode_b{batch}", compute, memory, 0.0,
                              self.hw.kernel_launch_s)
 
+    def serve_macro_cost(self, horizon: int, remaining, *,
+                         flops_per_token: float, weight_bytes: float,
+                         kv_bytes_per_slot: float = 0,
+                         dtype_bytes: int = 2) -> CostBreakdown:
+        """Per-useful-token cost of one K-token decode macro-step.
+
+        A macro-step runs ``horizon`` lockstep decode steps inside ONE
+        device program, then pays ONE host round trip (``hw.host_sync_s``)
+        for scheduler bookkeeping.  ``remaining`` is the per-slot remaining
+        token budget of the active slots: a slot that finishes (EOS or
+        budget) after ``r < K`` steps rides the remaining ``K - r`` steps
+        masked — wasted lockstep work the horizon sweep must charge for.
+        Useful tokens = sum(min(K, r)); every cost term is normalized by it,
+        so large K amortizes the sync until finish raggedness erodes it —
+        the serve-path instance of the paper's sync-overhead-vs-parallelism
+        tradeoff.
+        """
+        k = max(int(horizon), 1)
+        batch = max(len(remaining), 1)
+        useful = sum(min(k, max(int(r), 0)) for r in remaining)
+        useful = max(useful, 1)
+        step = self.serve_decode_step_cost(
+            batch, flops_per_token=flops_per_token, weight_bytes=weight_bytes,
+            kv_bytes_per_slot=kv_bytes_per_slot, dtype_bytes=dtype_bytes)
+        return CostBreakdown(
+            f"K_{k}",
+            k * step.compute / useful,
+            k * step.memory / useful,
+            0.0,
+            (k * step.fixed + self.hw.host_sync_s) / useful,
+        )
+
     def serve_prefill_cost(self, prompt_len: int, chunk: int, *,
                            flops_per_token: float, weight_bytes: float,
                            dtype_bytes: int = 2):

@@ -46,6 +46,9 @@ def main(argv=None):
                     default="both")
     ap.add_argument("--prefill-chunk", default="auto",
                     help="'auto' (CostEngine decision) or an explicit chunk")
+    ap.add_argument("--macro-step", default="auto",
+                    help="decode macro-step horizon K: 'auto' (CostEngine "
+                         "decision) or an explicit K (1 = per-token loop)")
     ap.add_argument("--eos-id", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -76,7 +79,7 @@ def main(argv=None):
     results = [
         rt.serve(cfg, trace(), mode=mode, model=model, params=params,
                  slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
-                 prefill_chunk=args.prefill_chunk)
+                 prefill_chunk=args.prefill_chunk, macro_step=args.macro_step)
         for mode in modes
     ]
 
@@ -85,6 +88,9 @@ def main(argv=None):
               f"{res.tok_per_s:.1f} tok/s  "
               f"p50 {res.p50_s*1e3:.0f}ms  p95 {res.p95_s*1e3:.0f}ms")
         if res.report is not None:
+            print(f"    host syncs {res.report.host_syncs} "
+                  f"({res.report.host_syncs_per_token:.3f}/token), "
+                  f"device dispatches {res.report.device_dispatches}")
             for r in res.report.requests:
                 print(f"    {r.rid}: arrival {r.arrival_s*1e3:6.0f}ms  "
                       f"queue {r.queue_wait_s*1e3:6.0f}ms  "
@@ -92,14 +98,17 @@ def main(argv=None):
                       f"latency {r.latency_s*1e3:6.0f}ms  "
                       f"tokens {len(r.tokens)}")
 
-    serve_rows = [e for e in rt.ledger.entries if e.site == "serve"]
+    serve_rows = [e for e in rt.ledger.entries
+                  if e.site in ("serve", "serve_macro")]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")
     # tail: the head is warmup rows whose measured times include jit compile
     for e in serve_rows[-12:]:
+        op = e.query.get("op", "macro_horizon" if e.site == "serve_macro"
+                         else "?")
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
-        print(f"    {e.query.get('op', '?'):14s} {e.choice:14s} "
+        print(f"    {op:14s} {e.choice:14s} "
               f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")
     return 0
 

@@ -57,6 +57,14 @@ def _zero_slots(leaf, mask, axis):
     return jnp.where(mask.reshape(shape), jnp.zeros((), leaf.dtype), leaf)
 
 
+def _select_slots(mask, axis, new, old):
+    """Take ``new`` where the slot ``mask`` is True along ``axis``, else
+    keep ``old`` — the per-slot freeze behind masked decode steps."""
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
 def _insert_slot_leaf(axis, dst, src, slot):
     """Copy the single slot of ``src`` (slot-dim 1) into ``dst`` at ``slot``."""
     return jax.lax.dynamic_update_index_in_dim(
@@ -77,9 +85,10 @@ class Model:
     prefill: Callable[..., Any] = None  # (params, batch, ctx) -> (B,1,V) last-pos logits
     vlm_patches: Callable[[int], int] = staticmethod(lambda s: 0)
     # slot-indexed decode-state surgery (continuous-batching slot pool);
-    # both take/return per-slot (per_slot=True) states
+    # all take/return per-slot (per_slot=True) states
     reset_decode_slots: Callable[..., Any] = None  # (state, slot_mask) -> state
     insert_decode_slot: Callable[..., Any] = None  # (state, src, slot) -> state
+    merge_decode_state: Callable[..., Any] = None  # (new, old, active) -> state
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -212,12 +221,24 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
             state["pos"], src["pos"][0], slot, 0)
         return {"layers": layers, "pos": pos}
 
+    def merge_decode_state(new_state, old_state, active):
+        """Per-slot select: slots where ``active`` is True take the stepped
+        state, the rest stay EXACTLY frozen (positions AND layer state —
+        recurrent families must not accumulate masked-step updates)."""
+        mask = jnp.asarray(active, bool)
+        layers = tfm.stack_state_map(
+            cfg, functools.partial(_select_slots, mask),
+            new_state["layers"], old_state["layers"])
+        return {"layers": layers,
+                "pos": jnp.where(mask, new_state["pos"], old_state["pos"])}
+
     return Model(
         cfg=cfg, init=init, loss=loss, decode_step=decode_step,
         init_decode_state=init_decode_state, forward_logits=forward_logits,
         prefill=prefill, vlm_patches=functools.partial(_vlm_patches, cfg),
         reset_decode_slots=reset_decode_slots,
         insert_decode_slot=insert_decode_slot,
+        merge_decode_state=merge_decode_state,
     )
 
 
@@ -343,11 +364,19 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         return jax.tree.map(
             lambda dst, s: _insert_slot_leaf(0, dst, s, slot), state, src)
 
+    def merge_decode_state(new_state, old_state, active):
+        """Enc-dec decode state keeps every leaf's slot axis at 0, so one
+        uniform per-slot select suffices."""
+        mask = jnp.asarray(active, bool)
+        return jax.tree.map(
+            functools.partial(_select_slots, mask, 0), new_state, old_state)
+
     return Model(
         cfg=cfg, init=init, loss=loss, decode_step=decode_step,
         init_decode_state=init_decode_state, prefill=prefill,
         reset_decode_slots=reset_decode_slots,
         insert_decode_slot=insert_decode_slot,
+        merge_decode_state=merge_decode_state,
     )
 
 

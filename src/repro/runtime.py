@@ -317,12 +317,16 @@ class Runtime:
               params=None, seed: int = 0, slots: int = 4,
               max_len: Optional[int] = None, eos_id: int = 0,
               pad_id: Optional[int] = None, prefill_chunk="auto",
-              warmup: bool = True, now_fn=time.perf_counter) -> ServeResult:
+              macro_step="auto", warmup: bool = True,
+              now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
         ``continuous`` is the slot-pooled engine scheduled by this runtime's
-        CostEngine (admission / prefill-chunk / decode-composition decisions
-        land as ``site=serve`` ledger rows with measured step times).
+        CostEngine (admission / prefill-chunk / macro-horizon decisions land
+        as ``site=serve``/``site=serve_macro`` ledger rows with measured
+        step times).  ``macro_step`` sets the decode macro-step horizon:
+        ``"auto"`` lets the CostEngine pick K per composition, an int pins
+        it (K=1 reproduces the per-token loop exactly).
         ``static`` is the lockstep baseline: the batch forms at the last
         arrival and every request's latency includes that wait; it requires
         equal-length prompts.  ``params=None`` initializes fresh parameters
@@ -349,8 +353,10 @@ class Runtime:
                                  eos_id=eos_id, pad_id=pad_id)
             prompts = np.stack([np.asarray(r.prompt, np.int32) for r in trace])
             max_new = max(r.max_new_tokens for r in trace)
-            if warmup:  # compile outside the timed window
-                engine.generate(prompts, max_new_tokens=1)
+            if warmup:  # compile prefill AND the decode step outside the
+                # timed window (the batched-prefill priming no longer runs
+                # the decode step, so max_new must reach a real step)
+                engine.generate(prompts, max_new_tokens=min(2, max_new))
             start = max(r.arrival_s for r in trace)
             t0 = time.perf_counter()
             out = engine.generate(prompts, max_new_tokens=max_new)
@@ -371,9 +377,15 @@ class Runtime:
             engine = ContinuousServeEngine(
                 model, params, n_slots=slots, max_len=max_len, eos_id=eos_id,
                 pad_id=pad_id, cost_engine=self.engine,
-                prefill_chunk=prefill_chunk)
+                prefill_chunk=prefill_chunk, macro_step=macro_step)
             if warmup:
-                engine.warmup(min(r.prompt_len for r in trace))
+                # compile prefill (shape keys on the trace-wide max prompt
+                # length every group pads to) AND every macro horizon the
+                # trace's budgets can trigger, so the timed run never
+                # compiles
+                engine.warmup(max(r.prompt_len for r in trace),
+                              max_new_tokens=max(r.max_new_tokens
+                                                 for r in trace))
             report = engine.run(trace, now_fn=now_fn)
             pct = report.latency_percentiles()
             return ServeResult(

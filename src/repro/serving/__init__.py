@@ -1,10 +1,14 @@
 """Serving: static-batch baseline + continuous-batching serve stack.
 
-engine.py    — ServeEngine (fixed-batch anchor) and ContinuousServeEngine
-               (slot-pooled, chunked-prefill, CostEngine-scheduled)
+engine.py    — ServeEngine (fixed-batch anchor, one-call batched prefill)
+               and ContinuousServeEngine (slot-pooled, K-token macro-step
+               decode, group-batched prefill, CostEngine-scheduled,
+               host-sync/dispatch accounted)
 slots.py     — SlotPool: per-slot insert/reset/evict of pooled decode state
-scheduler.py — Request queue + ServeScheduler (site=serve CostEngine
-               decisions: admission, prefill chunk, decode composition)
+               (donated buffers, host occupancy/position mirrors)
+scheduler.py — Request queue + ServeScheduler (site=serve / serve_macro
+               CostEngine decisions: admission, prefill chunk, macro
+               horizon)
 """
 
 from repro.serving.engine import (  # noqa: F401

@@ -2,16 +2,30 @@
 
 ``ServeEngine`` is the fixed-batch baseline: one prompt matrix in, lockstep
 greedy decode out, with EOS masking and deterministic padding.  It is the
-token-for-token correctness anchor for the continuous engine.
+token-for-token correctness anchor for the continuous engine.  Its prompt
+priming is ONE jitted batched prefill call (``make_batched_prefill``), not
+the old per-token replay — the anchor pays P fewer host round trips per
+batch and stays honest about overhead.
 
-``ContinuousServeEngine`` is the real serve stack (DESIGN.md §5): requests
-arrive over time, a ``SlotPool`` holds one pooled decode state whose slots
-turn over as requests finish (insert/reset without re-jitting), prompts are
-lowered through chunked prefill (multi-token chunks through the same
-``decode_step`` forward the decode path runs; chunk-1 replay fallback for
-families without an exact chunked form), and every admission / chunk-size /
-batch-composition choice is a CostEngine ``CostQuery -> Decision`` ledgered
-as a ``site=serve`` row with the measured wall time attached.
+``ContinuousServeEngine`` is the real serve stack (DESIGN.md §5), built so
+the host is consulted once per MACRO-STEP, not once per token:
+
+  * decode runs as jitted K-token macro-steps (``make_decode_macro_step``:
+    ``lax.scan`` over K single-token steps with on-device EOS masking,
+    per-slot budget countdown and per-slot position advancement); the
+    horizon K is a ``CostQuery(kind=serve_macro)`` decision trading the
+    once-per-macro-step host sync against lockstep steps wasted when a
+    slot finishes mid-macro-step;
+  * admitted requests prefill as a GROUP directly into the pooled state
+    (one jitted scan-over-chunks program per group — no single-slot state
+    + insert copy, no per-chunk host round trips);
+  * the pooled decode state is DONATED through prefill/macro-step/reset,
+    so cache updates are in-place, never copy-on-write;
+  * every host synchronization and device dispatch is counted and lands in
+    ``ServeReport.as_dict()`` — the overhead reduction is machine-readable.
+
+Every admission / prefill-chunk / macro-horizon choice is a CostEngine
+``CostQuery -> Decision`` ledgered with the measured wall time attached.
 """
 
 from __future__ import annotations
@@ -19,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,20 +41,29 @@ import numpy as np
 
 from repro.core.costs.engine import CostEngine
 from repro.models.model import Model, mrope_positions
-from repro.serving.scheduler import Request, ServeScheduler
+from repro.serving.scheduler import (
+    Request,
+    ServeScheduler,
+    supports_chunked_prefill,
+)
 from repro.serving.slots import SlotPool
-from repro.training.step import make_serve_step
+from repro.training.step import (
+    make_batched_prefill,
+    make_decode_macro_step,
+    make_serve_step,
+)
 
 
 def emitted_count(out: np.ndarray, eos_id: int) -> int:
     """Tokens actually generated in a (B, T) output matrix: everything up
     to and including the first EOS per row (the rest is deterministic
-    padding)."""
-    total = 0
-    for row in out:
-        hits = np.flatnonzero(row == eos_id)
-        total += int(hits[0]) + 1 if hits.size else row.shape[0]
-    return total
+    padding).  Vectorized — no per-row Python loop."""
+    out = np.asarray(out)
+    if out.size == 0:
+        return 0
+    hits = out == eos_id
+    per_row = np.where(hits.any(axis=1), hits.argmax(axis=1) + 1, out.shape[1])
+    return int(per_row.sum())
 
 
 def _check_fits(prompt_len: int, max_new: int, max_len: int, who: str) -> None:
@@ -52,6 +75,19 @@ def _check_fits(prompt_len: int, max_new: int, max_len: int, who: str) -> None:
             f"{who}: prompt_len {prompt_len} + max_new_tokens {max_new} "
             f"= {need} exceeds max_len {max_len}; raise max_len (it must "
             f"cover prompt + generated tokens) or shorten the request")
+
+
+def _prefill_chunks(prompts: np.ndarray, chunk: int) -> np.ndarray:
+    """(B, L) padded prompts -> (n_chunks, B, chunk) for the jitted batched
+    prefill (L padded up to a chunk multiple so every chunk is full-width —
+    one compiled program per (chunk, n_chunks), not per ragged remainder)."""
+    b, length = prompts.shape
+    pad = (-length) % chunk
+    if pad:
+        prompts = np.pad(prompts, ((0, 0), (0, pad)))
+    n_chunks = prompts.shape[1] // chunk
+    return np.ascontiguousarray(
+        prompts.reshape(b, n_chunks, chunk).transpose(1, 0, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +111,9 @@ class ServeEngine:
     pad_id: Optional[int] = None
 
     def __post_init__(self):
-        self._step = jax.jit(make_serve_step(self.model))
+        self._step = jax.jit(make_serve_step(self.model), donate_argnums=(1,))
+        self._prefill = jax.jit(make_batched_prefill(self.model),
+                                donate_argnums=(1,))
         if self.pad_id is None:
             self.pad_id = self.eos_id
 
@@ -84,15 +122,15 @@ class ServeEngine:
         tokens up to and including EOS, deterministically padded after it."""
         b, p = prompts.shape
         _check_fits(p, max_new_tokens, self.max_len, "ServeEngine.generate")
-        state = self.model.init_decode_state(b, self.max_len)
+        state = self.model.init_decode_state(b, self.max_len, per_slot=True)
         mrope = self.model.cfg.pos_type == "mrope"
-        # prime the caches with the prompt (per-token replay baseline)
-        tok = None
-        for t in range(p):
-            batch = {"tokens": jnp.asarray(prompts[:, t : t + 1], jnp.int32)}
-            if mrope:
-                batch["positions"] = mrope_positions(b, 1, t)
-            tok, state = self._step(self.params, state, batch)
+        # prime the caches with ONE batched prefill program (chunk-1 scan
+        # replay for families without an exact chunked decode form)
+        chunk = p if supports_chunked_prefill(self.model.cfg) else 1
+        tok, state = self._prefill(
+            self.params, state,
+            jnp.asarray(_prefill_chunks(np.asarray(prompts, np.int32), chunk)),
+            jnp.asarray(np.full((b,), p, np.int32)))
         out = np.full((b, max_new_tokens), self.pad_id, np.int32)
         done = np.zeros((b,), bool)
         cur = np.asarray(tok)
@@ -117,11 +155,15 @@ class ServeEngine:
 
 @dataclasses.dataclass
 class ServeReport:
-    """Per-request latencies + aggregate throughput for one trace run."""
+    """Per-request latencies + aggregate throughput for one trace run,
+    plus the trace's host-synchronization / device-dispatch counts (the
+    overhead the macro-step hot path exists to amortize)."""
 
     requests: List[Request]
     wall_s: float
     pad_id: int
+    host_syncs: int = 0
+    device_dispatches: int = 0
 
     def output(self, rid: str, max_new_tokens: Optional[int] = None) -> np.ndarray:
         req = next(r for r in self.requests if r.rid == rid)
@@ -141,6 +183,10 @@ class ServeReport:
     def tok_per_s(self) -> float:
         return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def host_syncs_per_token(self) -> float:
+        return self.host_syncs / max(self.generated_tokens, 1)
+
     def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
         lats = [r.latency_s for r in self.requests if r.latency_s is not None]
         if not lats:
@@ -152,6 +198,9 @@ class ServeReport:
             "wall_s": self.wall_s,
             "generated_tokens": self.generated_tokens,
             "tok_per_s": self.tok_per_s,
+            "host_syncs": self.host_syncs,
+            "device_dispatches": self.device_dispatches,
+            "host_syncs_per_token": self.host_syncs_per_token,
             **self.latency_percentiles(),
             "requests": [
                 {
@@ -173,14 +222,18 @@ class ContinuousServeEngine:
 
     Token-for-token equivalent to ``ServeEngine`` on any fixed request set:
     same greedy decode over the same caches, just with slots admitted,
-    retired and refilled independently instead of in lockstep.
+    retired and refilled independently instead of in lockstep — and with
+    the decode loop running as jitted multi-token macro-steps
+    (``macro_step="auto"`` lets the scheduler pick K; an int pins it;
+    K=1 degenerates exactly to the per-token loop).
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: int = 0,
                  pad_id: Optional[int] = None,
                  cost_engine: Optional[CostEngine] = None,
-                 prefill_chunk: Union[str, int] = "auto"):
+                 prefill_chunk: Union[str, int] = "auto",
+                 macro_step: Union[str, int] = "auto"):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -189,58 +242,83 @@ class ContinuousServeEngine:
         if prefill_chunk != "auto":
             prefill_chunk = int(prefill_chunk)
         self.prefill_chunk = prefill_chunk
+        if macro_step != "auto":
+            macro_step = max(int(macro_step), 1)
+        self.macro_step = macro_step
         self.pool = SlotPool(model, n_slots, max_len)
         self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
-        self._decode = jax.jit(make_serve_step(model))
-        self._prefill_step = jax.jit(
-            lambda p, s, b: model.decode_step(p, s, b))
-        self._mrope = model.cfg.pos_type == "mrope"
-        # host mirrors of per-slot decode position / last emitted token
-        self._next_pos = np.zeros((n_slots,), np.int64)
+        # pooled decode state is donated through both hot-path programs:
+        # cache updates run in place, never copy-on-write
+        self._prefill = jax.jit(make_batched_prefill(model), donate_argnums=(1,))
+        self._macro_fns: Dict[int, Callable] = {}
+        # host mirrors of per-slot last token / remaining token budget
         self._last_tok = np.full((n_slots,), self.pad_id, np.int32)
-        self._last_composition: Optional[int] = None
+        self._budget = np.zeros((n_slots,), np.int32)
+        self._last_macro_key = None
+        # every admission group pads its prompts to the trace-wide max
+        # prompt length, so the jitted group prefill compiles ONE shape per
+        # trace instead of one per ragged group composition
+        self._group_pad: Optional[int] = None
+        # overhead accounting (engine-lifetime; ServeReport carries deltas)
+        self.host_syncs = 0
+        self.device_dispatches = 0
+
+    def _macro(self, horizon: int) -> Callable:
+        """Compiled K-token macro-step, cached per horizon (the candidate
+        set is fixed, so this cache is bounded)."""
+        fn = self._macro_fns.get(horizon)
+        if fn is None:
+            fn = jax.jit(
+                make_decode_macro_step(self.model, horizon, eos_id=self.eos_id,
+                                       pad_id=self.pad_id),
+                donate_argnums=(1,))
+            self._macro_fns[horizon] = fn
+        return fn
 
     # ------------------------------------------------------------------
 
-    def _chunked_prefill(self, req: Request):
-        """Lower the prompt through the decode forward in scheduler-chosen
-        chunks.  Returns (first_token, single-slot state, decision, dt)."""
+    def _admit_group(self, reqs: List[Request], now) -> None:
+        """Admit a group of requests with ONE batched prefill lowered
+        directly into their pooled slots (no single-slot state + insert
+        copy, one host sync for the whole group).  ``now`` is the run
+        clock: first tokens are stamped AFTER prefill returns, so TTFT
+        includes the prefill wall time."""
+        slots = [self.pool.acquire(r) for r in reqs]
+        lmax = max([r.prompt_len for r in reqs] + [self._group_pad or 0])
         override = None if self.prefill_chunk == "auto" else self.prefill_chunk
         chunk, dec = self.scheduler.prefill_chunk(
-            req.prompt_len, active_decodes=self.pool.active_count,
+            lmax, active_decodes=self.pool.active_count - len(reqs),
             override=override)
-        prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
-        state = self.model.init_decode_state(1, self.max_len, per_slot=True)
+        tokens = np.zeros((self.pool.n_slots, lmax), np.int32)
+        lengths = np.zeros((self.pool.n_slots,), np.int32)
+        for r, s in zip(reqs, slots):
+            r.admitted_s = now()
+            tokens[s, : r.prompt_len] = np.asarray(r.prompt, np.int32)
+            lengths[s] = r.prompt_len
         t0 = time.perf_counter()
-        logits = None
-        off = 0
-        while off < req.prompt_len:
-            c = min(chunk, req.prompt_len - off)
-            batch = {"tokens": jnp.asarray(prompt[:, off : off + c])}
-            if self._mrope:
-                batch["positions"] = mrope_positions(1, c, off)
-            logits, state = self._prefill_step(self.params, state, batch)
-            off += c
-        first = int(np.asarray(logits)[0, -1].argmax())
+        first, self.pool.state = self._prefill(
+            self.params, self.pool.state,
+            jnp.asarray(_prefill_chunks(tokens, chunk)), jnp.asarray(lengths))
+        first_np = np.asarray(first)  # ONE host sync for the whole group
         dt = time.perf_counter() - t0
+        self.device_dispatches += 1
+        self.host_syncs += 1
         self.scheduler.record_measured(
-            dec, dt, note=f"prefill len={req.prompt_len} chunk={chunk}")
-        return first, state, dt
-
-    def _admit(self, req: Request, now) -> None:
-        """``now`` is the run clock (callable): the first token is stamped
-        AFTER prefill returns, so TTFT includes the prefill wall time."""
-        req.admitted_s = now()
-        first, state, _ = self._chunked_prefill(req)
-        req.tokens.append(first)
-        req.first_token_s = now()
-        if first == self.eos_id or req.max_new_tokens <= 1:
-            req.finish_s = req.first_token_s
-            return
-        slot = self.pool.acquire(req)
-        self.pool.insert(slot, state)
-        self._next_pos[slot] = req.prompt_len
-        self._last_tok[slot] = first
+            dec, dt, note=f"prefill group={len(reqs)} len={lmax} chunk={chunk}")
+        t_first = now()
+        for r, s in zip(reqs, slots):
+            tk = int(first_np[s])
+            r.tokens.append(tk)
+            r.first_token_s = t_first
+            self.pool.set_pos(s, r.prompt_len)
+            if tk == self.eos_id or r.max_new_tokens <= 1:
+                r.finish_s = t_first
+                self.pool.release(s)
+                self._last_tok[s] = self.pad_id
+                self._budget[s] = 0
+            else:
+                self._last_tok[s] = tk
+                self._budget[s] = r.max_new_tokens - 1
 
     # ------------------------------------------------------------------
 
@@ -253,14 +331,17 @@ class ContinuousServeEngine:
                         f"request {r.rid!r}")
             r.tokens = []
             r.admitted_s = r.first_token_s = r.finish_s = None
+        self._group_pad = max((r.prompt_len for r in requests), default=0)
         queue = deque(sorted(requests, key=lambda r: r.arrival_s))  # stable
         active: Dict[int, Request] = {}
+        sync0 = self.host_syncs
+        disp0 = self.device_dispatches + self.pool.dispatch_count
         t0 = now_fn()
         offset = 0.0  # event-skip accumulator for frozen (virtual) clocks
         now = lambda: now_fn() - t0 + offset  # noqa: E731
 
         while queue or active:
-            # --- admission (scheduler decision per round) ---
+            # --- admission (one batched prefill per admitted group) ---
             while queue and self.pool.free_count:
                 t = now()
                 arrived = sum(1 for r in queue if r.arrival_s <= t)
@@ -271,8 +352,9 @@ class ContinuousServeEngine:
                     free_slots=self.pool.free_count)
                 if n_admit <= 0:
                     break
-                for _ in range(min(n_admit, self.pool.free_count)):
-                    self._admit(queue.popleft(), now)
+                group = [queue.popleft() for _ in range(
+                    min(n_admit, self.pool.free_count, arrived))]
+                self._admit_group(group, now)
                 active = {s: self.pool.owner(s)
                           for s in self.pool.active_slots()}
             if not active:
@@ -287,49 +369,84 @@ class ContinuousServeEngine:
                             offset += wait
                 continue
 
-            # --- one decode step over the pool ---
+            # --- one K-token macro-step over the pool ---
             batch_size = len(active)
-            dec = self.scheduler.decode_step(
-                batch_size, record=batch_size != self._last_composition)
-            self._last_composition = batch_size
+            remaining = tuple(sorted(int(self._budget[s]) for s in active))
+            override = None if self.macro_step == "auto" else self.macro_step
+            # key on the same budget clipping the CostEngine applies, so
+            # repeat compositions dedupe instead of re-recording as every
+            # budget decrements
+            cap = max(self.scheduler.macro_candidates) if override is None \
+                else override
+            key = (batch_size, tuple(min(r, cap) for r in remaining))
+            horizon, dec = self.scheduler.macro_horizon(
+                remaining, override=override,
+                record=key != self._last_macro_key)
+            self._last_macro_key = key
             mask = self.pool.active_mask()
-            batch = {
-                "tokens": jnp.asarray(self._last_tok[:, None]),
-                "active": jnp.asarray(mask),
-            }
-            if self._mrope:
-                batch["positions"] = mrope_positions(
-                    self.pool.n_slots, 1,
-                    jnp.asarray(self._next_pos, jnp.int32))
             t_step = time.perf_counter()
-            tok, self.pool.state = self._decode(
-                self.params, self.pool.state, batch)
-            tok_np = np.asarray(tok)  # sync point
+            emitted, self.pool.state = self._macro(horizon)(
+                self.params, self.pool.state,
+                jnp.asarray(self._last_tok), jnp.asarray(mask),
+                jnp.asarray(self._budget))
+            em = np.asarray(emitted)  # THE host sync for K tokens
+            self.device_dispatches += 1
+            self.host_syncs += 1
             self.scheduler.record_measured(
                 dec, time.perf_counter() - t_step,
-                note=f"decode step b={batch_size}")
-            self._next_pos[mask] += 1
+                note=f"macro K={horizon} b={batch_size}")
             t_emit = now()
             for slot in list(active):
                 req = active[slot]
-                tk = int(tok_np[slot])
-                req.tokens.append(tk)
-                if tk == self.eos_id or len(req.tokens) >= req.max_new_tokens:
+                n_before = len(req.tokens)
+                finished = False
+                for j in range(horizon):
+                    tk = int(em[slot, j])
+                    req.tokens.append(tk)
+                    if tk == self.eos_id or len(req.tokens) >= req.max_new_tokens:
+                        finished = True
+                        break
+                n_emitted = len(req.tokens) - n_before
+                self.pool.advance(slot, n_emitted)  # before release zeroes it
+                if finished:
                     req.finish_s = t_emit
                     self.pool.release(slot)
                     self._last_tok[slot] = self.pad_id
-                    self._next_pos[slot] = 0
+                    self._budget[slot] = 0
                     del active[slot]
                 else:
-                    self._last_tok[slot] = tk
+                    self._last_tok[slot] = int(em[slot, horizon - 1])
+                    self._budget[slot] -= n_emitted
 
-        return ServeReport(requests=list(requests), wall_s=now(),
-                           pad_id=self.pad_id)
+        return ServeReport(
+            requests=list(requests), wall_s=now(), pad_id=self.pad_id,
+            host_syncs=self.host_syncs - sync0,
+            device_dispatches=(self.device_dispatches
+                               + self.pool.dispatch_count - disp0))
 
     def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
-        """Compile the prefill/decode/insert/reset executables outside any
-        timed trace (one dummy request through the normal machinery)."""
-        req = Request("_warmup", np.ones((prompt_len,), np.int32),
-                      max_new_tokens)
+        """Compile the prefill/decode/reset executables outside any timed
+        trace: one SHORT dummy request through the normal machinery (the
+        prefill shape keys on ``prompt_len`` — pass the trace's max prompt
+        length), then every macro-step horizon the scheduler could pick
+        for budgets up to ``max_new_tokens`` (idle all-masked calls —
+        pooled state is donated through and comes back frozen).  The dummy
+        generates only a couple of tokens: horizon precompilation is the
+        idle loop's job, so warmup cost does not scale with
+        ``max_new_tokens``."""
+        dummy_new = min(2, max(max_new_tokens, 1))
+        req = Request("_warmup", np.ones((prompt_len,), np.int32), dummy_new)
         self.run([req])
-        self._last_composition = None
+        idle_tok = jnp.asarray(np.full((self.pool.n_slots,), self.pad_id,
+                                       np.int32))
+        idle_mask = jnp.zeros((self.pool.n_slots,), bool)
+        idle_budget = jnp.zeros((self.pool.n_slots,), np.int32)
+        horizons = [k for k in self.scheduler.macro_candidates
+                    if k <= max(max_new_tokens - 1, 1)]
+        if self.macro_step != "auto":
+            horizons = [self.macro_step]
+        for k in horizons:
+            emitted, self.pool.state = self._macro(k)(
+                self.params, self.pool.state, idle_tok, idle_mask, idle_budget)
+            np.asarray(emitted)
+        self._last_macro_key = None

@@ -20,6 +20,10 @@ from repro.configs.base import ModelConfig
 from repro.core.costs.engine import CostEngine, Decision, resolve_engine
 
 PREFILL_CHUNK_CANDIDATES = (1, 8, 16, 32, 64, 128, 256)
+# decode macro-step horizons: a FIXED candidate set (filtered, never clamped
+# to ad-hoc values) so the engine's per-K compiled macro-step cache stays
+# bounded and warmup can precompile every horizon a trace may pick
+MACRO_STEP_CANDIDATES = (1, 2, 4, 8, 16, 32)
 
 
 @dataclasses.dataclass
@@ -76,10 +80,12 @@ class ServeScheduler:
 
     def __init__(self, cfg: ModelConfig, engine: Optional[CostEngine] = None, *,
                  max_len: int,
-                 chunk_candidates: Tuple[int, ...] = PREFILL_CHUNK_CANDIDATES):
+                 chunk_candidates: Tuple[int, ...] = PREFILL_CHUNK_CANDIDATES,
+                 macro_candidates: Tuple[int, ...] = MACRO_STEP_CANDIDATES):
         self.cfg = cfg
         self.engine = resolve_engine(engine)
         self.chunk_candidates = tuple(chunk_candidates)
+        self.macro_candidates = tuple(macro_candidates)
         self.dtype_bytes = 4 if cfg.dtype == "float32" else 2
         # per-token work/weight-stream constants for the analytic serve costs
         active_params = cfg.active_param_count()
@@ -147,6 +153,33 @@ class ServeScheduler:
             weight_bytes=self.weight_bytes,
             kv_bytes_per_slot=self.kv_bytes_per_slot,
             dtype_bytes=self.dtype_bytes, record=record)
+
+    def macro_horizon(self, remaining, *, override: Optional[int] = None,
+                      record: bool = True) -> Tuple[int, Decision]:
+        """Decode macro-step horizon K for the current composition.
+
+        ``remaining`` holds the active slots' remaining token budgets; the
+        CostQuery(kind=serve_macro) sweep trades the once-per-macro-step
+        host sync against lockstep steps wasted when a slot finishes
+        mid-macro-step.  Candidates are FILTERED to the fixed set (never
+        clamped to arbitrary values) so every horizon a trace can pick is
+        precompilable; K=1 is always a candidate and reproduces the
+        one-sync-per-token loop exactly.
+        """
+        remaining = tuple(int(r) for r in remaining)
+        max_r = max(remaining) if remaining else 1
+        if override is not None:
+            candidates: Tuple[int, ...] = (max(int(override), 1),)
+        else:
+            candidates = tuple(k for k in self.macro_candidates
+                               if k <= max_r) or (1,)
+        dec = self.engine.decide_serve_macro(
+            len(remaining), remaining=remaining, candidates=candidates,
+            flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes,
+            kv_bytes_per_slot=self.kv_bytes_per_slot,
+            dtype_bytes=self.dtype_bytes, record=record)
+        return int(dec.value), dec
 
     def record_measured(self, decision: Decision, seconds: float,
                         note: str = "") -> None:

@@ -13,6 +13,14 @@ states).  Requests borrow a slot for their lifetime:
 as traced arguments, so admitting or evicting a request never recompiles —
 the fixed-shape decode step keeps running over the whole pool while slots
 turn over underneath it.
+
+The pooled state buffers are DONATED through insert/reset (and through the
+engine's prefill/macro-step programs): cache updates are in-place on
+device, never copy-on-write, and a stale reference to a pre-donation buffer
+raises instead of silently reading freed memory.  Occupancy (``active_mask``)
+and per-slot positions are HOST MIRRORS maintained by acquire/release/
+``advance`` — reading them never synchronizes with the device (the old
+``np.asarray(self.state["pos"])`` per call was one hidden host sync each).
 """
 
 from __future__ import annotations
@@ -34,10 +42,15 @@ class SlotPool:
         self.n_slots = n_slots
         self.max_len = max_len
         self.state = model.init_decode_state(n_slots, max_len, per_slot=True)
-        self._insert = jax.jit(model.insert_decode_slot)
-        self._reset = jax.jit(model.reset_decode_slots)
+        # donate the pooled state: slot surgery updates buffers in place
+        self._insert = jax.jit(model.insert_decode_slot, donate_argnums=(0,))
+        self._reset = jax.jit(model.reset_decode_slots, donate_argnums=(0,))
         self._free: List[int] = list(range(n_slots))
         self._owner: List[Optional[object]] = [None] * n_slots
+        # host mirrors: no device sync to inspect occupancy or positions
+        self._active = np.zeros((n_slots,), bool)
+        self._host_pos = np.zeros((n_slots,), np.int64)
+        self.dispatch_count = 0  # insert/reset programs launched
 
     # ------------------------------------------------------------------
 
@@ -53,7 +66,7 @@ class SlotPool:
         return [i for i in range(self.n_slots) if self._owner[i] is not None]
 
     def active_mask(self) -> np.ndarray:
-        return np.array([o is not None for o in self._owner], bool)
+        return self._active.copy()
 
     def owner(self, slot: int):
         return self._owner[slot]
@@ -67,11 +80,15 @@ class SlotPool:
         self._free.sort()
         slot = self._free.pop(0)
         self._owner[slot] = owner
+        self._active[slot] = True
         return slot
 
     def insert(self, slot: int, src_state) -> None:
         """Overwrite slot ``slot`` with a single-request per-slot state."""
+        pos = int(np.asarray(src_state["pos"]).reshape(-1)[0])
         self.state = self._insert(self.state, src_state, jnp.int32(slot))
+        self.dispatch_count += 1
+        self._host_pos[slot] = pos
 
     def release(self, slot: int) -> None:
         """Evict the slot's request: zero its decode state (position 0,
@@ -81,9 +98,22 @@ class SlotPool:
         mask = np.zeros((self.n_slots,), bool)
         mask[slot] = True
         self.state = self._reset(self.state, jnp.asarray(mask))
+        self.dispatch_count += 1
         self._owner[slot] = None
+        self._active[slot] = False
+        self._host_pos[slot] = 0
         self._free.append(slot)
 
+    # ------------------------------------------------------------------
+    # Host position mirror (the engine advances it as tokens land)
+    # ------------------------------------------------------------------
+
+    def set_pos(self, slot: int, pos: int) -> None:
+        self._host_pos[slot] = pos
+
+    def advance(self, slot: int, n: int) -> None:
+        self._host_pos[slot] += n
+
     def positions(self) -> np.ndarray:
-        """Per-slot cache positions (host copy of ``state['pos']``)."""
-        return np.asarray(self.state["pos"])
+        """Per-slot cache positions (host mirror — no device sync)."""
+        return self._host_pos.copy()

@@ -1,6 +1,8 @@
 from repro.training.step import (  # noqa: F401
     TrainLoopConfig,
     init_train_state,
+    make_batched_prefill,
+    make_decode_macro_step,
     make_serve_step,
     make_train_step,
 )

@@ -17,7 +17,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.model import Model
+from repro.models.model import Model, mrope_positions
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import compress_gradients, init_compression
 from repro.optim.schedule import warmup_cosine
@@ -103,10 +103,10 @@ def make_serve_step(model: Model, ctx=None) -> Callable:
     """One decode step: greedy next token + updated caches.
 
     When ``batch`` carries an ``active`` (B,) bool mask (continuous
-    batching), inactive slots keep their cache position frozen: their dummy
-    writes land at the frozen position and the whole slot is overwritten by
-    ``insert_decode_slot`` before it is ever read again, so free/retired
-    slots can ride along in the fixed-shape step without re-jitting.
+    batching), inactive slots keep their WHOLE decode state frozen
+    (``model.merge_decode_state``): positions, caches and recurrent states
+    see no trace of the masked dummy step, so free/retired slots can ride
+    along in the fixed-shape step without re-jitting.
     """
 
     def serve_fn(params, decode_state, batch):
@@ -115,9 +115,102 @@ def make_serve_step(model: Model, ctx=None) -> Callable:
         logits, new_state = model.decode_step(params, decode_state, model_batch, ctx)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         if active is not None:
-            new_state = dict(new_state)
-            new_state["pos"] = jnp.where(active, new_state["pos"],
-                                         decode_state["pos"])
+            new_state = model.merge_decode_state(new_state, decode_state, active)
         return next_tok, new_state
 
     return serve_fn
+
+
+def make_decode_macro_step(model: Model, horizon: int, *, eos_id: int,
+                           pad_id: int, ctx=None) -> Callable:
+    """K lockstep greedy decode steps inside ONE device program — the host
+    is consulted once per macro-step, not once per token.
+
+    ``lax.scan`` over ``horizon`` single-token decode steps with on-device
+    EOS masking and per-slot budget countdown: a slot that emits ``eos_id``
+    or exhausts its budget mid-macro-step is masked for the rest of the
+    scan (state fully frozen via ``merge_decode_state``, emissions padded
+    with ``pad_id``).  Positions are per-slot device state, so mrope
+    families need no host-built position tensors.
+
+    Returns ``macro_fn(params, state, tok, active, budget) ->
+    (emitted (B, K), new_state)`` where ``tok`` is each slot's last token,
+    ``active`` the live-slot mask and ``budget`` the per-slot remaining
+    token allowance.  Emission semantics match the per-token host loop
+    exactly: an active slot's EOS is emitted, then the slot goes quiet.
+    """
+    mrope = model.cfg.pos_type == "mrope"
+    k_steps = max(int(horizon), 1)
+
+    def macro_fn(params, state, tok, active, budget):
+        def body(carry, _):
+            st, tk, act, bud = carry
+            feed = jnp.where(act, tk, jnp.int32(pad_id))[:, None]
+            batch = {"tokens": feed}
+            if mrope:
+                batch["positions"] = mrope_positions(feed.shape[0], 1, st["pos"])
+            logits, new_st = model.decode_step(params, st, batch, ctx)
+            new_st = model.merge_decode_state(new_st, st, act)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            emit = jnp.where(act, nxt, jnp.int32(pad_id))
+            bud = bud - act.astype(jnp.int32)
+            new_act = act & (nxt != eos_id) & (bud > 0)
+            return (new_st, jnp.where(act, nxt, tk), new_act, bud), emit
+
+        (state, _, _, _), emitted = jax.lax.scan(
+            body, (state, tok, active, budget), None, length=k_steps)
+        return emitted.T, state  # (B, K)
+
+    return macro_fn
+
+
+def make_batched_prefill(model: Model, ctx=None) -> Callable:
+    """One jitted program that lowers a whole (padded) prompt group into a
+    per-slot decode state: ``lax.scan`` over fixed-width chunks through the
+    same ``decode_step`` forward the decode path runs, with per-slot
+    activity masks (slots not being prefilled stay fully frozen), per-row
+    TRUE-length position advancement for ragged groups, and on-device
+    capture of each row's first generated token at its own last prompt
+    position.  Pad garbage lands only at cache positions beyond each row's
+    advance limit, where the causal ``decode_attention`` mask never reads
+    it before a real decode write overwrites it.
+
+    ``prefill_fn(params, state, chunks, lengths) -> (first_tok (B,), state)``
+    with ``chunks`` (n_chunks, B, c) int32 padded prompt chunks and
+    ``lengths`` (B,) true prompt lengths (0 marks a slot not prefilled).
+    Chunk width and count are static shapes; the chunk width is the
+    scheduler's ``prefill_chunk`` decision (1 pins the exact per-token
+    replay for families without a chunked decode form).
+    """
+    mrope = model.cfg.pos_type == "mrope"
+
+    def prefill_fn(params, state, chunks, lengths):
+        n_chunks, b, c = chunks.shape
+
+        def body(carry, xs):
+            st, first = carry
+            i, tok = xs  # tok: (B, c)
+            off = i * c
+            valid = jnp.clip(lengths - off, 0, c)  # true tokens this chunk
+            act = valid > 0
+            batch = {"tokens": tok}
+            if mrope:
+                batch["positions"] = mrope_positions(b, c, st["pos"])
+            logits, new_st = model.decode_step(params, st, batch, ctx)
+            new_st = model.merge_decode_state(new_st, st, act)
+            # decode_step advanced active rows by the full chunk width;
+            # ragged rows only actually consumed ``valid`` prompt tokens
+            new_st = dict(new_st)
+            new_st["pos"] = jnp.where(act, st["pos"] + valid, st["pos"])
+            done_now = act & (lengths <= off + c)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(valid - 1, 0)[:, None, None], axis=1)[:, 0]
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return (new_st, jnp.where(done_now, nxt, first)), None
+
+        first0 = jnp.zeros((b,), jnp.int32)
+        (state, first), _ = jax.lax.scan(
+            body, (state, first0), (jnp.arange(n_chunks), chunks))
+        return first, state
+
+    return prefill_fn

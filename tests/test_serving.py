@@ -217,6 +217,108 @@ def test_continuous_eos_matches_static():
 
 
 # ---------------------------------------------------------------------------
+# Macro-step decode (the host-sync-free hot path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b",       # dense attn -> chunked prefill
+    "qwen2-vl-72b",         # mrope positions computed on device
+    "rwkv6-3b",             # recurrent -> chunk-1 replay fallback
+    "recurrentgemma-2b",    # hybrid local ring buffer -> replay fallback
+])
+def test_macro_step_eos_turnover_ragged_budgets_match_static(arch):
+    """Pinned K=4 macro-steps with a mid-macro EOS, slot turnover
+    (n_slots < n_requests) and ragged per-request ``max_new_tokens`` stay
+    token-identical to the static baseline."""
+    cfg, model, params = _build(arch)
+    prompts = _prompts(cfg, 3)
+    base, eos = _pick_eos(model, params, prompts)  # EOS fires at step 3 of r0
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=eos, pad_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    budgets = [MAX_NEW, 5, 6]  # ragged: slots hit budget mid-macro-step
+    engine = ContinuousServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                                   eos_id=eos, pad_id=0, macro_step=4)
+    report = engine.run(
+        [Request(f"r{i}", prompts[i], budgets[i]) for i in range(3)],
+        now_fn=lambda: 0.0)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            report.output(f"r{i}", budgets[i]), expected[i, : budgets[i]])
+
+
+def test_k1_macro_step_degenerates_to_per_token_loop():
+    """macro_step=1 must reproduce today's one-sync-per-token behavior
+    exactly, and K>1 must emit the same tokens with fewer host syncs."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 3)
+    static = ServeEngine(model, params, max_len=MAX_LEN, eos_id=0)
+    expected = static.generate(prompts, max_new_tokens=MAX_NEW)
+    got_k1, rep_k1 = _run_continuous(model, params, prompts, MAX_NEW,
+                                     n_slots=2, macro_step=1)
+    got_k8, rep_k8 = _run_continuous(model, params, prompts, MAX_NEW,
+                                     n_slots=2, macro_step=8)
+    np.testing.assert_array_equal(got_k1, expected)
+    np.testing.assert_array_equal(got_k8, expected)
+    # K=1 pays ~one sync per generated token on the decode path; K=8
+    # amortizes it 8x (both also pay one sync per prefill group)
+    assert rep_k8.host_syncs < rep_k1.host_syncs
+    assert rep_k1.host_syncs_per_token <= 1.0 + 1e-9
+
+
+def test_sync_and_dispatch_counters_in_report():
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 3)
+    _, report = _run_continuous(model, params, prompts, MAX_NEW,
+                                n_slots=2, macro_step=4)
+    d = report.as_dict()
+    assert d["host_syncs"] == report.host_syncs > 0
+    assert d["device_dispatches"] == report.device_dispatches >= report.host_syncs
+    assert d["host_syncs_per_token"] == pytest.approx(
+        report.host_syncs / report.generated_tokens)
+    # the whole point: fewer host syncs than generated tokens
+    assert report.host_syncs < report.generated_tokens
+
+
+def test_donated_state_is_not_aliased_by_live_buffers():
+    """The pooled decode state is donated through prefill/macro-step/reset:
+    stale references to pre-donation buffers must raise (in-place update,
+    not copy-on-write), and the engine must stay reusable run after run
+    (no accidental reuse of a deleted buffer inside the engine)."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    prompts = _prompts(cfg, 2, seed=11)
+    engine = ContinuousServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                                   eos_id=0, macro_step=4)
+    stale = jax.tree.leaves(engine.pool.state)
+    reqs = lambda: [Request(f"r{i}", prompts[i], MAX_NEW) for i in range(2)]  # noqa: E731
+    rep1 = engine.run(reqs(), now_fn=lambda: 0.0)
+    assert any_deleted(stale), "donation did not consume the old state"
+    rep2 = engine.run(reqs(), now_fn=lambda: 0.0)  # no RuntimeError on reuse
+    for i in range(2):
+        np.testing.assert_array_equal(rep1.output(f"r{i}", MAX_NEW),
+                                      rep2.output(f"r{i}", MAX_NEW))
+
+
+def any_deleted(leaves) -> bool:
+    for leaf in leaves:
+        try:
+            np.asarray(leaf)
+        except RuntimeError:
+            return True
+    return False
+
+
+def test_emitted_count_vectorized():
+    from repro.serving import emitted_count
+
+    out = np.array([[5, 7, 0, 9],    # EOS at index 2 -> 3 tokens
+                    [1, 2, 3, 4],    # no EOS -> all 4
+                    [0, 0, 0, 0]])   # EOS first -> 1
+    assert emitted_count(out, eos_id=0) == 3 + 4 + 1
+    assert emitted_count(np.zeros((0, 4), np.int32), eos_id=0) == 0
+
+
+# ---------------------------------------------------------------------------
 # Scheduler decisions on the overhead ledger
 # ---------------------------------------------------------------------------
 
@@ -230,11 +332,35 @@ def test_ledger_has_site_serve_rows():
     rows = [e for e in rt.ledger.entries if e.site == "serve"]
     assert rows, "no site=serve rows in the overhead ledger"
     ops = {e.query.get("op") for e in rows}
-    assert {"admission", "prefill_chunk", "decode_step"} <= ops
-    measured = [e for e in rows if e.measured_s is not None]
+    assert {"admission", "prefill_chunk"} <= ops
+    # the decode composition is now the macro-horizon decision site
+    macro = [e for e in rt.ledger.entries if e.site == "serve_macro"]
+    assert macro, "no site=serve_macro rows in the overhead ledger"
+    measured = [e for e in rows + macro if e.measured_s is not None]
     assert measured, "no measured wall times attached to serve decisions"
     # decisions carry real predicted breakdowns
-    assert all(e.predicted_s > 0 for e in rows)
+    assert all(e.predicted_s > 0 for e in rows + macro)
+
+
+def test_macro_horizon_decision_trades_sync_against_waste():
+    """The serve_macro sweep amortizes the host sync over K on uniform
+    budgets, but shrinks the horizon when a slot is about to finish."""
+    from repro.serving.scheduler import ServeScheduler
+
+    engine = CostEngine()
+    cfg = get_config("tinyllama-1.1b").reduced()
+    sched = ServeScheduler(cfg, engine, max_len=MAX_LEN)
+    k_uniform, dec = sched.macro_horizon((8, 8, 8))
+    assert k_uniform > 1  # sync amortization wins on uniform budgets
+    assert dec.query.kind == "serve_macro"
+    assert dec.baseline.strategy == "K_1"
+    k_ragged, _ = sched.macro_horizon((1, 8, 8))
+    assert k_ragged <= k_uniform  # imminent finish caps the horizon
+    k_pinned, _ = sched.macro_horizon((8, 8, 8), override=1)
+    assert k_pinned == 1
+    # candidates are FILTERED to the fixed set, never clamped to ad-hoc Ks
+    k_small, dec_small = sched.macro_horizon((3,))
+    assert k_small in sched.macro_candidates
 
 
 def test_prefill_chunk_decision_prefers_replay_only_for_non_attn():
