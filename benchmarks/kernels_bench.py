@@ -13,8 +13,16 @@ Two layers:
 Writes the machine-readable perf trajectory to ``BENCH_kernels.json``:
 one record per (op, shape) with the default/tuned configs, median times,
 tuned-vs-default speedup and the warm-cache source.
+
+With ``check_regression=True`` (CI: ``python benchmarks/kernels_bench.py
+--check-regression``) the run FAILS if any (op, shape)'s tuned-vs-default
+speedup drops more than 20% below the committed ``BENCH_kernels.json``.
+The ratio is tuned/default measured on the SAME machine in the SAME
+process, so absolute runner speed cancels — the gate trips when the tuner
+stops finding the winning config, not when CI hardware changes.
 """
 
+import argparse
 import json
 import statistics
 import tempfile
@@ -28,6 +36,7 @@ from repro.core.costs.calibration import backend_fingerprint
 from repro.kernels import ops, ref, tuning
 
 BENCH_JSON = "BENCH_kernels.json"
+REGRESSION_FRACTION = 0.8  # fail below 80% of the committed speedup
 
 
 def _t(f, *args, reps=3):
@@ -60,7 +69,45 @@ def _record(op, shape, res, warm_res):
     }
 
 
-def run(csv=True, runtime=None):
+def _load_previous() -> dict:
+    try:
+        with open(BENCH_JSON) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _check_regression(previous: dict, records: list) -> None:
+    """CI gate: per-(op, shape) tuned-vs-default speedup must stay within
+    REGRESSION_FRACTION of the committed baseline.  Both ratios are
+    machine-normalized (tuned and default measured back to back on the same
+    runner), so this compares tuner quality, not runner speed.  Rows the
+    committed file lacks — or where either run has no measured speedup —
+    are skipped, not failed."""
+    committed = {(r.get("op"), r.get("shape")): r.get("tuned_vs_default_speedup")
+                 for r in previous.get("records", [])}
+    failures = []
+    for r in records:
+        base = committed.get((r["op"], r["shape"]))
+        now = r["tuned_vs_default_speedup"]
+        if base is None or now is None:
+            continue
+        floor = REGRESSION_FRACTION * base
+        status = "ok" if now >= floor else "FAIL"
+        print(f"kernel_tune,regression_check={status},op={r['op']},"
+              f"shape={r['shape']},speedup={now:.2f},committed={base:.2f},"
+              f"floor={floor:.2f}")
+        if now < floor:
+            failures.append(f"{r['op']}/{r['shape']}: "
+                            f"{now:.2f}x < {floor:.2f}x floor "
+                            f"(80% of committed {base:.2f}x)")
+    if failures:
+        raise AssertionError(
+            "tuned-vs-default kernel speedup regressed: " + "; ".join(failures))
+
+
+def run(csv=True, runtime=None, check_regression: bool = False):
+    previous = _load_previous()  # before this run overwrites BENCH_JSON
     interpret = jax.default_backend() != "tpu"
     # fresh cache dir per run — deliberately NOT the session's cache: every
     # BENCH record is measured THIS run (a persistent dir would silently
@@ -154,8 +201,15 @@ def run(csv=True, runtime=None):
         json.dump(payload, f, indent=1)
     if csv:
         print(f"kernel_tune,wrote={BENCH_JSON}")
+    if check_regression:
+        _check_regression(previous, records)
     return records
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail if any (op, shape)'s tuned-vs-default speedup "
+                         "drops >20%% below the committed "
+                         f"{BENCH_JSON} (machine-normalized ratio)")
+    run(check_regression=ap.parse_args().check_regression)

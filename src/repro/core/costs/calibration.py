@@ -13,6 +13,8 @@ CPU backend, an interpret-mode Pallas run, a different TPU generation.
   * effective memory bandwidth — large-array copy traffic / wall time
   * matmul throughput          — FLOP/s at a well-tiled order, per dtype
   * collective base latency    — tiny psum under a mesh (multi-device only)
+  * interconnect bandwidth     — large psum, ring-model inverted to the
+                                 per-link figure (multi-device only)
 
 and returns a ``HardwareSpec`` with those fields replaced.  Results persist
 to a JSON cache keyed by a backend fingerprint (platform, device kind and
@@ -144,6 +146,41 @@ def _measure_collective_base(reps: int = 20) -> Optional[float]:
     return _timeit(lambda: f(x).block_until_ready(), reps)
 
 
+def _measure_interconnect_bw(nbytes: int = 1 << 22, reps: int = 5,
+                             links: int = V5E.ici_links) -> Optional[float]:
+    """Effective per-link interconnect bandwidth (bytes/s) from a LARGE
+    all-reduce over every visible device — the bandwidth half of the
+    serve_shard communication term (``_measure_collective_base`` is the
+    latency half).  Inverts the ring-all-reduce model ``collective_time``
+    charges (2·(c-1)/c · bytes over ici_links/2 effective links) so the
+    analytic model reproduces the measured transfer on this backend.
+    None on single-device backends."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    c = jax.device_count()
+    if c < 2:
+        return None
+    mesh = jax.make_mesh((c,), ("cal",))
+    f = jax.jit(shard_map(
+        lambda x: jax.lax.psum(x, "cal"), mesh=mesh,
+        in_specs=P("cal"), out_specs=P(),
+    ))
+    n = max(nbytes // 4 // c * c, c)
+    x = jnp.ones((n,), jnp.float32)
+    dt = _timeit(lambda: f(x).block_until_ready(), reps)
+    base = _measure_collective_base() or 0.0
+    wire_bytes = 2.0 * (c - 1) / c * (n * 4)
+    eff_bw = wire_bytes / max(dt - base, 1e-9)
+    # collective_time uses bw = ici_bw_per_link * ici_links / 2 * ici_eff;
+    # report the per-link figure for the base spec's link count (ici_eff is
+    # an OverheadModel derate, deliberately left in place)
+    return eff_bw * 2.0 / max(links, 1)
+
+
 # ---------------------------------------------------------------------------
 # calibrate + persistence
 # ---------------------------------------------------------------------------
@@ -174,6 +211,8 @@ def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
     attempt("peak_flops_bf16",
             lambda: _measure_matmul_flops(matmul_order, dtype="bfloat16"))
     attempt("collective_base_s", _measure_collective_base)
+    attempt("ici_bw_per_link",
+            lambda: _measure_interconnect_bw(links=base.ici_links))
     return probes
 
 

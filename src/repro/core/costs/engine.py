@@ -46,7 +46,7 @@ class CostQuery:
     """Hashable description of one fork-join decision problem.
 
     ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard |
-    serve | serve_macro.
+    serve | serve_macro | serve_shard.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -359,6 +359,44 @@ class CostEngine:
                         alternatives=tuple(cands),
                         value=int(best.strategy.split("_")[1]))
 
+    def _solve_serve_shard(self, q: CostQuery) -> Decision:
+        """Serve-time shard-vs-replicate — the eighth decision site
+        (site=serve_shard ledger rows).
+
+        shape=(batch,); chips = the mesh's model-axis size; params:
+        candidates (TP degrees to sweep — restricting the set is how a
+        forced override stays honest on the ledger), flops_per_token,
+        weight_bytes, kv_bytes_per_slot, n_layers, d_model.  Each TP
+        candidate's communication term is ``2 * n_layers`` all-reduces of
+        the (batch, d_model) residual per decode step at the calibrated
+        interconnect bandwidth/latency (``serve_shard_cost``); the savings
+        are per-device FLOPs and weight/KV bytes divided by TP.  Baseline =
+        tp=1, the replicated single-device step.  The engine attaches
+        measured sharded macro-step wall times to these rows.
+        """
+        (batch,) = q.shape
+        kw = dict(
+            flops_per_token=float(q.param("flops_per_token", 0.0)),
+            weight_bytes=float(q.param("weight_bytes", 0.0)),
+            kv_bytes_per_slot=float(q.param("kv_bytes_per_slot", 0.0)),
+            n_layers=int(q.param("n_layers", 1)),
+            d_model=int(q.param("d_model", 1)),
+            dtype_bytes=q.dtype_bytes)
+        baseline = self.model.serve_shard_cost(batch, tp=1, **kw)
+        seen, cands = set(), []
+        for tp in q.param("candidates", (1, q.chips)):
+            tp = max(1, int(tp))
+            if tp in seen:
+                continue
+            seen.add(tp)
+            cands.append(self.model.serve_shard_cost(batch, tp=tp, **kw))
+        best = min(cands, key=lambda cb: cb.total)
+        choice = "replicate" if best.strategy == "tp_1" or best.strategy.startswith("decode_") \
+            else "shard_model"
+        value = 1 if choice == "replicate" else int(best.strategy.split("_")[1])
+        return Decision(q, choice, best, baseline=baseline,
+                        alternatives=tuple(cands), value=value)
+
     # ------------------------------------------------------------------
     # Convenience wrappers (the decision sites)
     # ------------------------------------------------------------------
@@ -447,6 +485,26 @@ class CostEngine:
             flops_per_token=int(flops_per_token),
             weight_bytes=int(weight_bytes),
             kv_bytes_per_slot=int(kv_bytes_per_slot)), record=record)
+
+    def decide_serve_shard(self, batch: int, *, tp: int,
+                           flops_per_token: float, weight_bytes: float,
+                           kv_bytes_per_slot: float = 0, n_layers: int = 1,
+                           d_model: int = 1, dtype_bytes: int = 2,
+                           candidates: Optional[Sequence[int]] = None,
+                           record: bool = True) -> Decision:
+        """Shard-vs-replicate the serve model over ``tp`` model-axis chips.
+        ``candidates=None`` sweeps {1, tp}; a forced override passes a
+        single-element set (the restriction, not a lie, lands on the
+        ledger)."""
+        if candidates is None:
+            candidates = (1, tp)
+        return self.query(CostQuery.make(
+            "serve_shard", (batch,), chips=tp, dtype_bytes=dtype_bytes,
+            candidates=tuple(int(c) for c in candidates),
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_slot=int(kv_bytes_per_slot),
+            n_layers=int(n_layers), d_model=int(d_model)), record=record)
 
     # ------------------------------------------------------------------
     # Crossover solvers (delegate to the analytic model on this hw)

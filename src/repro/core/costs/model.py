@@ -322,6 +322,42 @@ class OverheadModel:
             (k * step.fixed + self.hw.host_sync_s) / useful,
         )
 
+    def serve_shard_cost(self, batch: int, *, tp: int, flops_per_token: float,
+                         weight_bytes: float, kv_bytes_per_slot: float = 0,
+                         n_layers: int = 1, d_model: int = 1,
+                         dtype_bytes: int = 2) -> CostBreakdown:
+        """One batched decode step with the serve model TENSOR-SHARDED over
+        ``tp`` chips of the model axis (tp=1 degenerates to the replicated
+        ``serve_decode_step_cost``).
+
+        Sharding divides the per-device FLOPs and — the real win at decode
+        batch sizes, where every step is weight-stream-bound — the per-device
+        weight and KV-cache bytes by ``tp``.  The price is communication:
+        each layer's row-parallel output projections (attention wo + FFN
+        w_out) end in an all-reduce of the (batch, d_model) residual
+        partial-sums, so a decode step pays ``2 * n_layers`` all-reduces of
+        ``batch * d_model * dtype_bytes`` bytes at the calibrated
+        interconnect bandwidth plus ``collective_base_s`` latency each —
+        the paper's inter-core communication + synchronization terms, which
+        dominate for small models and make replicate the right verdict below
+        the crossover."""
+        if tp <= 1:
+            return self.serve_decode_step_cost(
+                batch, flops_per_token=flops_per_token,
+                weight_bytes=weight_bytes, kv_bytes_per_slot=kv_bytes_per_slot,
+                dtype_bytes=dtype_bytes)
+        peak = (self.hw.peak_flops_bf16 if dtype_bytes == 2
+                else self.hw.peak_flops_f32)
+        b = max(batch, 1)
+        compute = b * flops_per_token / (tp * peak * self.mxu_eff)
+        memory = (weight_bytes + b * kv_bytes_per_slot) / (
+            tp * self.hw.hbm_bw * self.mem_eff)
+        per_layer = self.collective_time(
+            b * d_model * dtype_bytes, tp, "all_reduce")
+        return CostBreakdown(f"tp_{tp}", compute, memory,
+                             2 * max(n_layers, 1) * per_layer,
+                             self.hw.kernel_launch_s)
+
     def serve_prefill_cost(self, prompt_len: int, chunk: int, *,
                            flops_per_token: float, weight_bytes: float,
                            dtype_bytes: int = 2):

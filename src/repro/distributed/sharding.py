@@ -69,6 +69,8 @@ class ShardingCtx:
 
     @property
     def dp_spec(self):
+        if not self.data_axes:  # pure-TP ctx (serve meshes): no data axis
+            return None
         return tuple(self.data_axes) if len(self.data_axes) > 1 else self.data_axes[0]
 
     def constrain(self, x, spec: P):
@@ -279,6 +281,69 @@ def batch_sharding(batch_shape: Any, mesh: Mesh, data_axes=("data",)) -> Any:
         return NamedSharding(mesh, spec)
 
     return jax.tree.map(rule, batch_shape)
+
+
+def serve_state_sharding(state_shape: Any, mesh: Mesh, *,
+                         model_axis: str = "model") -> Any:
+    """Pooled decode-state placement for tensor-parallel serving.
+
+    The slot (batch) axis is never sharded — slots turn over under
+    host-driven masks, and the serve mesh's data axis is degenerate.  KV
+    caches ((L?, B, S, H, hd) leaves keyed 'k'/'v') shard their kv-head dim
+    over the model axis when divisible (column-parallel attention writes
+    shard-local heads, so cache updates stay communication-free); heads
+    that don't divide fall back to the cache-length dim, then to
+    replication — the same feasibility-before-speedup rule as
+    ``param_shardings``.  Positions and recurrent/conv states replicate:
+    they are per-slot vectors or square per-head states the model axis has
+    no clean dim for.
+    """
+    tp = mesh.shape.get(model_axis, 1)
+
+    def rule(path, arr):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        # leading stacked-layer axis: scan states and period-scan groups
+        lead = 1 if ("groups" in keys or not any(
+            k.startswith(("rest_", "layer_", "dec_", "cross_")) or k == "pos"
+            for k in keys)) else 0
+        lead = min(lead, max(arr.ndim - 1, 0))
+        dims = [None] * arr.ndim
+        if tp > 1 and keys and keys[-1] in ("k", "v") and arr.ndim == lead + 4:
+            s, h = arr.shape[lead + 1], arr.shape[lead + 2]
+            if h % tp == 0:
+                dims[lead + 2] = model_axis
+            elif s % tp == 0 and s >= 2 * tp:
+                dims[lead + 1] = model_axis
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(rule, state_shape)
+
+
+def validate_serve_mesh(cfg, mesh_shape: Dict[str, int],
+                        model_axis: str = "model") -> None:
+    """Fail fast — with a fix, not a GSPMD traceback — when a requested
+    serve mesh cannot tensor-shard ``cfg``: the model axis must divide the
+    dims the serve param rules split (FFN width, the attention projection
+    output H*hd, d_model for the residual constraint, and the vocab for the
+    sharded unembed)."""
+    tp = int(mesh_shape.get(model_axis, 1))
+    if tp <= 1:
+        return
+    hd = cfg.resolved_head_dim
+    problems = []
+    if cfg.d_ff % tp:
+        problems.append(f"d_ff={cfg.d_ff}")
+    if (cfg.n_heads * hd) % tp:
+        problems.append(f"n_heads*head_dim={cfg.n_heads * hd}")
+    if cfg.d_model % tp:
+        problems.append(f"d_model={cfg.d_model}")
+    if cfg.vocab_size % tp:
+        problems.append(f"vocab_size={cfg.vocab_size}")
+    if problems:
+        raise ValueError(
+            f"mesh model axis {model_axis}={tp} does not divide "
+            f"{', '.join(problems)} for arch {cfg.name!r}; pick a model-axis "
+            f"size that divides the head/FFN dims (or 1 to replicate)")
 
 
 def state_sharding(state_shape: Any, mesh: Mesh, data_axes=("data",),

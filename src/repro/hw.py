@@ -26,7 +26,9 @@ class HardwareSpec:
     hbm_bytes: float = 16e9  # 16 GB HBM per chip
     hbm_bw: float = 819e9  # bytes/s
     vmem_bytes: float = 128 * 1024 * 1024  # ~128 MiB VMEM
-    # Interconnect
+    # Interconnect (feeds every collective term, incl. the serve_shard
+    # shard-vs-replicate site; calibration can replace ici_bw_per_link and
+    # collective_base_s with measured backend values)
     ici_bw_per_link: float = 50e9  # bytes/s per ICI link direction
     ici_links: int = 4  # 2D torus: 4 links per chip
     dcn_bw: float = 25e9 / 8  # inter-pod DCN, bytes/s per host share

@@ -49,9 +49,28 @@ def main(argv=None):
     ap.add_argument("--macro-step", default="auto",
                     help="decode macro-step horizon K: 'auto' (CostEngine "
                          "decision) or an explicit K (1 = per-token loop)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve mesh as 'data=1,model=8' (continuous engine "
+                         "only); the model axis must divide the arch's "
+                         "head/FFN dims and axis sizes must multiply to the "
+                         "visible device count")
+    ap.add_argument("--serve-shard", choices=("auto", "shard", "replicate"),
+                    default="auto",
+                    help="shard-vs-replicate over the mesh model axis: "
+                         "'auto' asks the CostEngine (the serve_shard "
+                         "decision site), the others force a verdict")
     ap.add_argument("--eos-id", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    mesh_shape = None
+    if args.mesh is not None:
+        try:
+            mesh_shape = {k.strip(): int(v) for k, v in
+                          (part.split("=") for part in args.mesh.split(","))}
+        except ValueError:
+            ap.error(f"--mesh must look like 'data=1,model=8', "
+                     f"got {args.mesh!r}")
 
     if args.max_len is None:
         args.max_len = args.prompt_len + args.max_new
@@ -79,7 +98,9 @@ def main(argv=None):
     results = [
         rt.serve(cfg, trace(), mode=mode, model=model, params=params,
                  slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
-                 prefill_chunk=args.prefill_chunk, macro_step=args.macro_step)
+                 prefill_chunk=args.prefill_chunk, macro_step=args.macro_step,
+                 mesh_shape=mesh_shape if mode == "continuous" else None,
+                 shard_params=args.serve_shard)
         for mode in modes
     ]
 
@@ -91,6 +112,10 @@ def main(argv=None):
             print(f"    host syncs {res.report.host_syncs} "
                   f"({res.report.host_syncs_per_token:.3f}/token), "
                   f"device dispatches {res.report.device_dispatches}")
+            if res.report.mesh_shape is not None:
+                print(f"    mesh {res.report.mesh_shape} "
+                      f"({res.report.device_count} devices), "
+                      f"collective ops {res.report.collective_ops}")
             for r in res.report.requests:
                 print(f"    {r.rid}: arrival {r.arrival_s*1e3:6.0f}ms  "
                       f"queue {r.queue_wait_s*1e3:6.0f}ms  "
@@ -99,14 +124,14 @@ def main(argv=None):
                       f"tokens {len(r.tokens)}")
 
     serve_rows = [e for e in rt.ledger.entries
-                  if e.site in ("serve", "serve_macro")]
+                  if e.site in ("serve", "serve_macro", "serve_shard")]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")
     # tail: the head is warmup rows whose measured times include jit compile
     for e in serve_rows[-12:]:
-        op = e.query.get("op", "macro_horizon" if e.site == "serve_macro"
-                         else "?")
+        op = e.query.get("op", {"serve_macro": "macro_horizon",
+                                "serve_shard": "serve_shard"}.get(e.site, "?"))
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
         print(f"    {op:14s} {e.choice:14s} "
               f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")

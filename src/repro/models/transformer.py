@@ -105,6 +105,15 @@ def _attn_apply(
             kc, vc = attn_lib.update_kv_cache(cache["k"], cache["v"], k, v, cache_pos)
             out = attn_lib.decode_attention(q, kc, vc, cache_pos + s)
         new_cache = {"k": kc, "v": vc}
+        if ctx is not None:
+            # Pin the attention output's sharding before the wo contraction.
+            # With wo row-sharded, GSPMD otherwise propagates a head-dim
+            # partition backward into the grouped-query einsum and the ring
+            # buffer update; when heads don't divide the model axis the
+            # padded partition miscompiles the windowed decode path (k-cache
+            # rows scaled by the GQA group count).  constrain_heads shards
+            # heads only when divisible, replicating otherwise.
+            out = ctx.constrain_heads(out)
     else:
         chunk = ctx.attn_chunk if ctx is not None else 1024
         out = attn_lib.attention(

@@ -317,7 +317,8 @@ class Runtime:
               params=None, seed: int = 0, slots: int = 4,
               max_len: Optional[int] = None, eos_id: int = 0,
               pad_id: Optional[int] = None, prefill_chunk="auto",
-              macro_step="auto", warmup: bool = True,
+              macro_step="auto", mesh_shape: Optional[Dict[str, int]] = None,
+              shard_params: str = "auto", warmup: bool = True,
               now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
@@ -327,6 +328,12 @@ class Runtime:
         step times).  ``macro_step`` sets the decode macro-step horizon:
         ``"auto"`` lets the CostEngine pick K per composition, an int pins
         it (K=1 reproduces the per-token loop exactly).
+        ``mesh_shape`` (e.g. ``{"data": 1, "model": 8}``) puts the
+        continuous engine on a device mesh; whether serve state actually
+        shards over the model axis is the ``serve_shard`` CostEngine
+        decision, forced with ``shard_params='shard'``/``'replicate'``.
+        The axis sizes must divide the arch's head/FFN dims and multiply
+        to the visible device count.
         ``static`` is the lockstep baseline: the batch forms at the last
         arrival and every request's latency includes that wait; it requires
         equal-length prompts.  ``params=None`` initializes fresh parameters
@@ -341,6 +348,33 @@ class Runtime:
 
         if not trace:
             raise ValueError("serve() needs a non-empty trace of Requests")
+        mesh = None
+        if mesh_shape is not None:
+            from repro.distributed.sharding import validate_serve_mesh
+
+            shape = {"data": 1, "model": 1}
+            unknown = set(mesh_shape) - set(shape)
+            if unknown:
+                raise ValueError(
+                    f"serve mesh_shape axes must be 'data'/'model', got "
+                    f"{sorted(unknown)}")
+            shape.update({k: int(v) for k, v in mesh_shape.items()})
+            # arch divisibility first: checkable on any host, independent
+            # of how many devices this process happens to see
+            validate_serve_mesh(cfg, shape)
+            if mode == "static" and shape["model"] > 1:
+                raise ValueError(
+                    "mode='static' is the single-device lockstep baseline; "
+                    "model-axis sharding needs mode='continuous'")
+            need = shape["data"] * shape["model"]
+            if need != jax.device_count():
+                raise ValueError(
+                    f"serve mesh {shape} needs {need} devices but jax sees "
+                    f"{jax.device_count()} (forcing a CPU mesh takes "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    f"before jax initializes)")
+            mesh = jax.make_mesh((shape["data"], shape["model"]),
+                                 ("data", "model"))
         if model is None:
             model = build_model(cfg)
         if params is None:
@@ -377,7 +411,8 @@ class Runtime:
             engine = ContinuousServeEngine(
                 model, params, n_slots=slots, max_len=max_len, eos_id=eos_id,
                 pad_id=pad_id, cost_engine=self.engine,
-                prefill_chunk=prefill_chunk, macro_step=macro_step)
+                prefill_chunk=prefill_chunk, macro_step=macro_step,
+                mesh=mesh, shard_params=shard_params)
             if warmup:
                 # compile prefill (shape keys on the trace-wide max prompt
                 # length every group pads to) AND every macro horizon the

@@ -31,6 +31,7 @@ Every admission / prefill-chunk / macro-horizon choice is a CostEngine
 from __future__ import annotations
 
 import dataclasses
+import re
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Union
@@ -38,6 +39,8 @@ from typing import Callable, Dict, List, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.costs.engine import CostEngine
 from repro.models.model import Model, mrope_positions
@@ -52,6 +55,16 @@ from repro.training.step import (
     make_decode_macro_step,
     make_serve_step,
 )
+
+
+# post-SPMD HLO collective ops (GSPMD inserts these during compilation, so
+# the count must come from compiled HLO, not the lowered StableHLO).  Matches
+# only the opcode position — "all-reduce(" — not instruction names
+# ("%all-reduce.1") or operand references; async pairs count once via the
+# -start half
+_COLLECTIVE_RE = re.compile(
+    r"(?<!%)\b(?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
 
 
 def emitted_count(out: np.ndarray, eos_id: int) -> int:
@@ -164,6 +177,11 @@ class ServeReport:
     pad_id: int
     host_syncs: int = 0
     device_dispatches: int = 0
+    # mesh placement + per-trace collective traffic (counted from compiled
+    # HLO per program shape × dispatches); mesh_shape is None off-mesh
+    mesh_shape: Optional[Dict[str, int]] = None
+    device_count: int = 1
+    collective_ops: int = 0
 
     def output(self, rid: str, max_new_tokens: Optional[int] = None) -> np.ndarray:
         req = next(r for r in self.requests if r.rid == rid)
@@ -201,6 +219,9 @@ class ServeReport:
             "host_syncs": self.host_syncs,
             "device_dispatches": self.device_dispatches,
             "host_syncs_per_token": self.host_syncs_per_token,
+            "mesh_shape": self.mesh_shape,
+            "device_count": self.device_count,
+            "collective_ops": self.collective_ops,
             **self.latency_percentiles(),
             "requests": [
                 {
@@ -226,14 +247,24 @@ class ContinuousServeEngine:
     the decode loop running as jitted multi-token macro-steps
     (``macro_step="auto"`` lets the scheduler pick K; an int pins it;
     K=1 degenerates exactly to the per-token loop).
-    """
+
+    Passing ``mesh`` puts the engine on a device mesh.  Whether serve state
+    actually SHARDS over the mesh's model axis or stays replicated is the
+    eighth CostEngine decision site (``CostQuery(kind=serve_shard)``;
+    ``shard_params`` forces it): on a shard verdict, params take the
+    training-layer logical specs, pooled KV caches shard over kv heads, and
+    the jitted prefill/macro-step programs pin their outputs to the same
+    layout so donation stays in-place across shards.  A replicate verdict
+    executes exactly the single-device path (the decision is still
+    ledgered and the mesh still reported)."""
 
     def __init__(self, model: Model, params, *, n_slots: int = 4,
                  max_len: int = 256, eos_id: int = 0,
                  pad_id: Optional[int] = None,
                  cost_engine: Optional[CostEngine] = None,
                  prefill_chunk: Union[str, int] = "auto",
-                 macro_step: Union[str, int] = "auto"):
+                 macro_step: Union[str, int] = "auto",
+                 mesh=None, shard_params: str = "auto"):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -245,11 +276,62 @@ class ContinuousServeEngine:
         if macro_step != "auto":
             macro_step = max(int(macro_step), 1)
         self.macro_step = macro_step
-        self.pool = SlotPool(model, n_slots, max_len)
         self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
+        # --- mesh placement: shard-vs-replicate is a CostQuery, not a flag
+        if shard_params not in ("auto", "shard", "replicate"):
+            raise ValueError(
+                f"shard_params must be 'auto', 'shard' or 'replicate', "
+                f"got {shard_params!r}")
+        self.mesh = mesh
+        self.tp = 1
+        self._ctx = None
+        self._shard_decision = None
+        self._state_shardings = None
+        self.collective_ops = 0  # engine-lifetime; reports carry deltas
+        self._collective_counts: Dict[object, int] = {}
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                ShardingCtx,
+                param_shardings,
+                serve_state_sharding,
+                validate_serve_mesh,
+            )
+
+            mesh_tp = int(mesh.shape.get("model", 1))
+            validate_serve_mesh(model.cfg, dict(mesh.shape))
+            tp_choice, self._shard_decision = self.scheduler.serve_shard(
+                n_slots, tp=mesh_tp,
+                override=None if shard_params == "auto" else shard_params)
+            if tp_choice > 1:
+                self.tp = tp_choice
+                # pure-TP ctx: no data axis on the serve hot path (decode
+                # batch = n_slots, not a data-parallel global batch)
+                self._ctx = ShardingCtx(
+                    mesh=mesh, data_axes=(),
+                    cost_engine=self.scheduler.engine,
+                    infer_replicate_params=True)
+                self.params = jax.device_put(
+                    params,
+                    param_shardings(jax.eval_shape(lambda: params), mesh,
+                                    data_axes=()))
+                self._state_shardings = serve_state_sharding(
+                    jax.eval_shape(lambda: model.init_decode_state(
+                        n_slots, max_len, per_slot=True)), mesh)
+        self.pool = SlotPool(model, n_slots, max_len,
+                             shardings=self._state_shardings)
         # pooled decode state is donated through both hot-path programs:
-        # cache updates run in place, never copy-on-write
-        self._prefill = jax.jit(make_batched_prefill(model), donate_argnums=(1,))
+        # cache updates run in place, never copy-on-write.  Under sharding,
+        # out_shardings pins (replicated tokens, same state layout) so the
+        # donated buffers are reused shard-for-shard with no resharding copy
+        if self._ctx is not None:
+            out_sh = (NamedSharding(mesh, P()), self._state_shardings)
+            self._prefill = jax.jit(make_batched_prefill(model, self._ctx),
+                                    donate_argnums=(1,), out_shardings=out_sh)
+            self._macro_out = out_sh
+        else:
+            self._prefill = jax.jit(make_batched_prefill(model),
+                                    donate_argnums=(1,))
+            self._macro_out = None
         self._macro_fns: Dict[int, Callable] = {}
         # host mirrors of per-slot last token / remaining token budget
         self._last_tok = np.full((n_slots,), self.pad_id, np.int32)
@@ -268,12 +350,30 @@ class ContinuousServeEngine:
         set is fixed, so this cache is bounded)."""
         fn = self._macro_fns.get(horizon)
         if fn is None:
+            kw = {} if self._macro_out is None else \
+                {"out_shardings": self._macro_out}
             fn = jax.jit(
                 make_decode_macro_step(self.model, horizon, eos_id=self.eos_id,
-                                       pad_id=self.pad_id),
-                donate_argnums=(1,))
+                                       pad_id=self.pad_id, ctx=self._ctx),
+                donate_argnums=(1,), **kw)
             self._macro_fns[horizon] = fn
         return fn
+
+    def _count_collectives(self, key, fn, *args) -> int:
+        """Collective ops in one compiled program, from post-SPMD HLO text,
+        cached per program key (shapes repeat; warmup absorbs the one
+        compile per key).  0 when the engine is not sharded."""
+        if self._ctx is None:
+            return 0
+        n = self._collective_counts.get(key)
+        if n is None:
+            try:
+                txt = fn.lower(*args).compile().as_text()
+                n = len(_COLLECTIVE_RE.findall(txt))
+            except Exception:  # backend without HLO text: count unavailable
+                n = 0
+            self._collective_counts[key] = n
+        return n
 
     # ------------------------------------------------------------------
 
@@ -295,10 +395,14 @@ class ContinuousServeEngine:
             r.admitted_s = now()
             tokens[s, : r.prompt_len] = np.asarray(r.prompt, np.int32)
             lengths[s] = r.prompt_len
+        chunks = jnp.asarray(_prefill_chunks(tokens, chunk))
+        lens = jnp.asarray(lengths)
+        self.collective_ops += self._count_collectives(
+            ("prefill", chunks.shape), self._prefill,
+            self.params, self.pool.state, chunks, lens)
         t0 = time.perf_counter()
         first, self.pool.state = self._prefill(
-            self.params, self.pool.state,
-            jnp.asarray(_prefill_chunks(tokens, chunk)), jnp.asarray(lengths))
+            self.params, self.pool.state, chunks, lens)
         first_np = np.asarray(first)  # ONE host sync for the whole group
         dt = time.perf_counter() - t0
         self.device_dispatches += 1
@@ -336,6 +440,10 @@ class ContinuousServeEngine:
         active: Dict[int, Request] = {}
         sync0 = self.host_syncs
         disp0 = self.device_dispatches + self.pool.dispatch_count
+        col0 = self.collective_ops
+        # attach ONE measured wall time per run to the serve_shard row (the
+        # first macro-step, normalized per decode step)
+        self._shard_pending = self._shard_decision is not None
         t0 = now_fn()
         offset = 0.0  # event-skip accumulator for frozen (virtual) clocks
         now = lambda: now_fn() - t0 + offset  # noqa: E731
@@ -384,17 +492,28 @@ class ContinuousServeEngine:
                 record=key != self._last_macro_key)
             self._last_macro_key = key
             mask = self.pool.active_mask()
+            macro_fn = self._macro(horizon)
+            tok_in = jnp.asarray(self._last_tok)
+            mask_in = jnp.asarray(mask)
+            budget_in = jnp.asarray(self._budget)
+            self.collective_ops += self._count_collectives(
+                ("macro", horizon), macro_fn,
+                self.params, self.pool.state, tok_in, mask_in, budget_in)
             t_step = time.perf_counter()
-            emitted, self.pool.state = self._macro(horizon)(
-                self.params, self.pool.state,
-                jnp.asarray(self._last_tok), jnp.asarray(mask),
-                jnp.asarray(self._budget))
+            emitted, self.pool.state = macro_fn(
+                self.params, self.pool.state, tok_in, mask_in, budget_in)
             em = np.asarray(emitted)  # THE host sync for K tokens
+            dt_step = time.perf_counter() - t_step
             self.device_dispatches += 1
             self.host_syncs += 1
             self.scheduler.record_measured(
-                dec, time.perf_counter() - t_step,
-                note=f"macro K={horizon} b={batch_size}")
+                dec, dt_step, note=f"macro K={horizon} b={batch_size}")
+            if self._shard_pending:
+                self.scheduler.record_measured(
+                    self._shard_decision, dt_step / horizon,
+                    note=f"serve_shard tp={self.tp} per-step from macro "
+                         f"K={horizon} b={batch_size}")
+                self._shard_pending = False
             t_emit = now()
             for slot in list(active):
                 req = active[slot]
@@ -422,7 +541,12 @@ class ContinuousServeEngine:
             requests=list(requests), wall_s=now(), pad_id=self.pad_id,
             host_syncs=self.host_syncs - sync0,
             device_dispatches=(self.device_dispatches
-                               + self.pool.dispatch_count - disp0))
+                               + self.pool.dispatch_count - disp0),
+            mesh_shape=(dict(self.mesh.shape)
+                        if self.mesh is not None else None),
+            device_count=(int(self.mesh.devices.size)
+                          if self.mesh is not None else 1),
+            collective_ops=self.collective_ops - col0)
 
     def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
         """Compile the prefill/decode/reset executables outside any timed

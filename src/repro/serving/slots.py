@@ -35,7 +35,13 @@ from repro.models.model import Model
 
 
 class SlotPool:
-    def __init__(self, model: Model, n_slots: int, max_len: int):
+    def __init__(self, model: Model, n_slots: int, max_len: int,
+                 shardings=None):
+        """``shardings`` (optional) is a pytree of NamedShardings matching the
+        pooled state: the state is placed onto the mesh up front and every
+        slot-surgery program pins its output to the same layout
+        (``out_shardings``), so donation stays in-place across shards and no
+        resharding copy sneaks in between insert/reset and the decode step."""
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.model = model
@@ -43,8 +49,19 @@ class SlotPool:
         self.max_len = max_len
         self.state = model.init_decode_state(n_slots, max_len, per_slot=True)
         # donate the pooled state: slot surgery updates buffers in place
-        self._insert = jax.jit(model.insert_decode_slot, donate_argnums=(0,))
-        self._reset = jax.jit(model.reset_decode_slots, donate_argnums=(0,))
+        if shardings is not None:
+            self.state = jax.device_put(self.state, shardings)
+            self._insert = jax.jit(model.insert_decode_slot,
+                                   donate_argnums=(0,),
+                                   out_shardings=shardings)
+            self._reset = jax.jit(model.reset_decode_slots,
+                                  donate_argnums=(0,),
+                                  out_shardings=shardings)
+        else:
+            self._insert = jax.jit(model.insert_decode_slot,
+                                   donate_argnums=(0,))
+            self._reset = jax.jit(model.reset_decode_slots,
+                                  donate_argnums=(0,))
         self._free: List[int] = list(range(n_slots))
         self._owner: List[Optional[object]] = [None] * n_slots
         # host mirrors: no device sync to inspect occupancy or positions
