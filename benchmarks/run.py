@@ -15,6 +15,11 @@
                      staggered arrival trace (tok/s + p50/p95 latency,
                      token-equivalence anchor, site=serve ledger rows);
                      writes the machine-readable BENCH_serving.json
+  stress_bench     — overload (2x Poisson) + fault-injection drills
+                     (raise | nan | stall) against the request lifecycle:
+                     every request terminal, transient faults retry to a
+                     token-identical finish; writes the SLO row under
+                     BENCH_serving.json's "stress" key
 
 Every suite is a thin adapter over the public Runtime API: ``run(csv=True,
 runtime=None)`` receives the session (engine + caches + ledger) from this
@@ -37,6 +42,7 @@ SUITE_NAMES = (
     "roofline_table",
     "cost_ledger",
     "serving_bench",
+    "stress_bench",
 )
 
 
@@ -48,6 +54,7 @@ def _suites():
         roofline_table,
         serving_bench,
         sort_pivots,
+        stress_bench,
         wkv_chunk,
     )
 
@@ -59,6 +66,7 @@ def _suites():
         "roofline_table": roofline_table.run,
         "cost_ledger": cost_ledger.run,
         "serving_bench": serving_bench.run,
+        "stress_bench": stress_bench.run,
     }
     assert set(suites) == set(SUITE_NAMES)
     return suites

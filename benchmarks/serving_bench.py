@@ -258,6 +258,8 @@ def run(csv=True, runtime=None, check_regression: bool = False) -> None:
         "serve_ledger_rows": len(serve_rows),
         "serve_ledger_measured": len(measured),
     }
+    if "stress" in previous:  # stress_bench owns this key; carry it forward
+        result["stress"] = previous["stress"]
     result["trajectory"] = _trajectory(previous, {
         "tag": TRAJECTORY_TAG,
         "staggered_continuous_tok_per_s": cont_st.tok_per_s,

@@ -1,0 +1,286 @@
+"""Overload + fault-injection stress harness for the continuous engine —
+the SLO gate behind the request-lifecycle machinery (CPU-reduced config).
+
+Three stages, all machine-normalized so the gate is robust to runner speed:
+
+  calibrate — an unloaded all-at-once trace measures this machine's clean
+              service rate (requests/s) and mean request latency; every
+              knob below is derived from those two numbers, never from
+              absolute wall-clock constants
+  overload  — a Poisson trace at ``OVERLOAD_FACTOR``x the measured service
+              rate, with a bounded queue and per-request deadlines at
+              ``DEADLINE_X``x the measured unloaded latency, run under the
+              watchdog.  The engine must shed (REJECTED), expire
+              (TIMED_OUT), and finish (COMPLETED) — every request terminal,
+              nothing hangs
+  faults    — one drill per fault class (raise | nan | stall) injected
+              mid-trace on a shared pre-compiled engine.  Transient faults
+              (raise, watchdogged stall) must retry to a token-identical
+              finish; a poisoned step (nan) must FAIL exactly the corrupted
+              request and complete the rest token-identically
+
+Hard invariants (always enforced, not just under ``--check-slo``): every
+request reaches a terminal state in every run, fault drills behave per
+class, and the overload run completes at least one request.  The run is
+recorded under the ``"stress"`` key of ``BENCH_serving.json`` (read-
+modify-write: serving_bench's keys are preserved).  With ``--check-slo``
+(CI smoke: ``python benchmarks/stress_bench.py --smoke --check-slo``) the
+run additionally FAILS if the completed fraction or the goodput-over-
+unloaded ratio falls more than ``1 - SLO_FRACTION`` below the committed
+baseline row (skipped when the committed row used a different trace size).
+The suite builds its OWN Runtime so the ledger rows are exactly this
+suite's decisions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime import Runtime, synthetic_trace
+from repro.serving.faults import FaultInjector, FaultSpec
+
+BENCH_JSON = "BENCH_serving.json"
+SLO_FRACTION = 0.6  # fail below 60% of the committed baseline ratios
+
+ARCH = "tinyllama-1.1b"
+PROMPT_LEN = 8
+MAX_NEW = 8
+SLOTS = 3
+UNLOADED_REQUESTS = 6
+OVERLOAD_REQUESTS = 16      # doubled outside --smoke
+OVERLOAD_FACTOR = 2.0       # Poisson rate = 2x the measured service rate
+DEADLINE_X = 8.0            # deadline = 8x the measured unloaded latency
+QUEUE_LIMIT = 2 * SLOTS
+DRILL_REQUESTS = 4
+STALL_WATCHDOG_S = 1.0
+
+
+def _trace(cfg, n, *, arrival, rate=50.0, seed=0):
+    return synthetic_trace(
+        n, prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+        vocab_size=cfg.vocab_size, arrival=arrival, rate=rate, seed=seed)
+
+
+def _load_previous() -> dict:
+    try:
+        with open(BENCH_JSON) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _tokens_by_rid(report) -> dict:
+    return {r.rid: list(r.tokens) for r in report.requests}
+
+
+def _assert_terminal(report, label: str) -> None:
+    if not report.all_terminal:
+        bad = {r.rid: r.state.value for r in report.requests
+               if not r.state.terminal}
+        raise AssertionError(
+            f"{label}: non-terminal requests after run(): {bad}")
+
+
+def _fault_drill(engine, cfg, kind: str, clean_tokens: dict) -> dict:
+    """One drill: inject ``kind`` on the shared engine's macro site (after
+    one clean step) and check the per-class contract against the clean
+    reference run of the same trace."""
+    stall_needs_watchdog = kind == "stall"
+    engine.injector = FaultInjector((FaultSpec(
+        kind, site="macro", after=1, stall_s=30.0),))
+    engine.watchdog_s = STALL_WATCHDOG_S if stall_needs_watchdog else None
+    try:
+        report = engine.run(_trace(cfg, DRILL_REQUESTS, arrival="all"))
+    finally:
+        engine.injector = None
+        engine.watchdog_s = None
+
+    _assert_terminal(report, f"fault drill {kind!r}")
+    states = report.state_counts()
+    tokens = _tokens_by_rid(report)
+    completed = [r.rid for r in report.requests
+                 if r.state.value == "COMPLETED"]
+    failed = [r for r in report.requests if r.state.value == "FAILED"]
+    mismatched = [rid for rid in completed
+                  if tokens[rid] != clean_tokens[rid]]
+    if mismatched:
+        raise AssertionError(
+            f"fault drill {kind!r}: completed requests diverged from the "
+            f"clean run: {mismatched}")
+    if kind in ("raise", "stall"):
+        if failed or len(completed) != DRILL_REQUESTS:
+            raise AssertionError(
+                f"transient fault {kind!r} should retry to completion, "
+                f"got states {states}")
+        if report.step_retries < 1:
+            raise AssertionError(
+                f"fault drill {kind!r}: no retry recorded")
+        if stall_needs_watchdog and report.watchdog_fires < 1:
+            raise AssertionError("stall drill: watchdog never fired")
+    else:  # nan: the corrupted request fails individually, rest complete
+        if len(failed) != 1 or len(completed) != DRILL_REQUESTS - 1:
+            raise AssertionError(
+                f"nan drill should fail exactly the poisoned request, "
+                f"got states {states}")
+        if "corrupt" not in (failed[0].reason or ""):
+            raise AssertionError(
+                f"nan drill: unexpected failure reason {failed[0].reason!r}")
+    return {
+        "states": states,
+        "all_terminal": report.all_terminal,
+        "step_retries": report.step_retries,
+        "watchdog_fires": report.watchdog_fires,
+        "completed_token_identical": True,
+    }
+
+
+def run(csv=True, runtime=None, smoke: bool = True,
+        check_slo: bool = False) -> None:
+    rt = Runtime()  # own session => the serve/serve_admit rows are ours
+    previous = _load_previous()
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = PROMPT_LEN + MAX_NEW
+    common = dict(model=model, params=params, max_len=max_len, eos_id=0)
+    n_overload = OVERLOAD_REQUESTS if smoke else 2 * OVERLOAD_REQUESTS
+
+    # --- calibrate: unloaded clean run -> machine-local rate + latency ---
+    unloaded = rt.serve(cfg, _trace(cfg, UNLOADED_REQUESTS, arrival="all"),
+                        mode="continuous", slots=SLOTS, **common)
+    rep_u = unloaded.report
+    for _ in range(1):  # one re-run on the warm engine steadies the numbers
+        r2 = unloaded.engine.run(_trace(cfg, UNLOADED_REQUESTS, arrival="all"))
+        if r2.tok_per_s > rep_u.tok_per_s:
+            rep_u = r2
+    _assert_terminal(rep_u, "unloaded calibration")
+    lat = [r.latency_s for r in rep_u.requests if r.latency_s is not None]
+    mean_latency_s = float(np.mean(lat))
+    service_rate = UNLOADED_REQUESTS / rep_u.wall_s
+    deadline_ms = DEADLINE_X * mean_latency_s * 1e3
+    rate = OVERLOAD_FACTOR * service_rate
+
+    # --- overload: Poisson arrivals at 2x the machine's service rate,
+    # bounded queue + derived deadlines, watchdogged dispatch ---
+    over = rt.serve(cfg, _trace(cfg, n_overload, arrival="poisson",
+                                rate=rate, seed=1),
+                    mode="continuous", slots=SLOTS,
+                    queue_limit=QUEUE_LIMIT, deadline_ms=deadline_ms,
+                    watchdog_ms=max(5000.0, 10 * deadline_ms), **common)
+    rep_o = over.report
+    _assert_terminal(rep_o, "overload")
+    states = rep_o.state_counts()
+    done = [r for r in rep_o.requests if r.state.value == "COMPLETED"]
+    completed_frac = len(done) / n_overload
+    goodput = (sum(len(r.tokens) for r in done) / rep_o.wall_s
+               if rep_o.wall_s > 0 else 0.0)
+    goodput_over_unloaded = (goodput / rep_u.tok_per_s
+                             if rep_u.tok_per_s > 0 else None)
+    if not done:
+        raise AssertionError(
+            f"overload run completed zero requests (states {states}); "
+            f"admission/deadline policy is shedding everything")
+
+    # --- fault drills on a shared pre-compiled K=1 engine (macro_step=1
+    # guarantees enough macro-site calls for a mid-trace injection) ---
+    clean = rt.serve(cfg, _trace(cfg, DRILL_REQUESTS, arrival="all"),
+                     mode="continuous", slots=SLOTS, macro_step=1, **common)
+    _assert_terminal(clean.report, "fault drill clean reference")
+    clean_tokens = _tokens_by_rid(clean.report)
+    faults = {kind: _fault_drill(clean.engine, cfg, kind, clean_tokens)
+              for kind in ("raise", "nan", "stall")}
+
+    admit_rows = [e for e in rt.ledger.entries if e.site == "serve_admit"]
+    stress = {
+        "trace": {"requests": n_overload, "prompt_len": PROMPT_LEN,
+                  "max_new": MAX_NEW, "slots": SLOTS,
+                  "queue_limit": QUEUE_LIMIT,
+                  "overload_factor": OVERLOAD_FACTOR,
+                  "deadline_x": DEADLINE_X},
+        "unloaded": {"tok_per_s": rep_u.tok_per_s,
+                     "mean_latency_s": mean_latency_s,
+                     "service_rate_rps": service_rate},
+        "overload": {"rate_rps": rate, "deadline_ms": deadline_ms,
+                     "states": states,
+                     "all_terminal": rep_o.all_terminal,
+                     "completed_frac": completed_frac,
+                     "goodput_tok_per_s": goodput,
+                     "step_retries": rep_o.step_retries,
+                     "watchdog_fires": rep_o.watchdog_fires,
+                     "preemptions": rep_o.preemptions},
+        "faults": faults,
+        "serve_admit_rows": len(admit_rows),
+        "slo": {"completed_frac": completed_frac,
+                "goodput_over_unloaded": goodput_over_unloaded},
+    }
+    result = dict(previous)  # read-modify-write: keep serving_bench's keys
+    result["stress"] = stress
+    with open(BENCH_JSON, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print(f"stress_bench,stage=calibrate,tok_s={rep_u.tok_per_s:.1f},"
+          f"service_rate_rps={service_rate:.1f},"
+          f"mean_latency_ms={mean_latency_s*1e3:.1f}")
+    st = ",".join(f"{k}={v}" for k, v in sorted(states.items()))
+    print(f"stress_bench,stage=overload,rate_rps={rate:.1f},"
+          f"deadline_ms={deadline_ms:.0f},{st},"
+          f"completed_frac={completed_frac:.2f},"
+          f"goodput_tok_s={goodput:.1f},admit_rows={len(admit_rows)}")
+    for kind, row in faults.items():
+        fst = ",".join(f"{k}={v}" for k, v in sorted(row["states"].items()))
+        print(f"stress_bench,stage=fault,kind={kind},{fst},"
+              f"retries={row['step_retries']},"
+              f"watchdog_fires={row['watchdog_fires']},"
+              f"token_identical={row['completed_token_identical']}")
+    print(f"stress_bench,all_terminal=True,json={BENCH_JSON}")
+    if check_slo:
+        _check_slo(previous, stress)
+
+
+def _check_slo(previous: dict, stress: dict) -> None:
+    """CI smoke gate: completed fraction and goodput-over-unloaded —
+    both already ratios of same-machine measurements, so absolute runner
+    speed cancels — must stay within SLO_FRACTION of the committed row.
+    Skipped when there is no committed row or it used a different trace."""
+    base = previous.get("stress")
+    if not base or not base.get("slo"):
+        print("stress_bench,slo_check=skipped (no committed stress baseline)")
+        return
+    if base.get("trace") != stress.get("trace"):
+        print("stress_bench,slo_check=skipped (committed baseline used a "
+              "different trace shape)")
+        return
+    failures = []
+    for key in ("completed_frac", "goodput_over_unloaded"):
+        committed, got = base["slo"].get(key), stress["slo"].get(key)
+        if committed is None or got is None:
+            continue
+        floor = SLO_FRACTION * committed
+        status = "ok" if got >= floor else "FAIL"
+        print(f"stress_bench,slo_check={status},{key}={got:.2f},"
+              f"committed={committed:.2f},floor={floor:.2f}")
+        if got < floor:
+            failures.append(
+                f"{key} {got:.2f} < {floor:.2f} "
+                f"({SLO_FRACTION:.0%} of the committed {committed:.2f})")
+    if failures:
+        raise AssertionError("stress SLO regressed: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (the committed-baseline sizing; "
+                         "omit to double the overload trace)")
+    ap.add_argument("--check-slo", action="store_true",
+                    help="fail if completed_frac or goodput-over-unloaded "
+                         f"drops below {SLO_FRACTION:.0%} of the committed "
+                         f"{BENCH_JSON} stress row")
+    args = ap.parse_args()
+    run(smoke=args.smoke, check_slo=args.check_slo)

@@ -40,6 +40,8 @@ __all__ = [
     "TrainLoopConfig",
     "AdamWConfig",
     "Request",
+    "RequestState",
+    "InvalidRequestError",
     "ServeReport",
     # cost subsystem (the Runtime's internals, exposed for injection)
     "CostEngine",
@@ -68,6 +70,8 @@ _EXPORTS = {
     "TrainLoopConfig": "repro.training",
     "AdamWConfig": "repro.optim.adamw",
     "Request": "repro.serving",
+    "RequestState": "repro.serving",
+    "InvalidRequestError": "repro.serving",
     "ServeReport": "repro.serving",
     "CostEngine": "repro.core.costs",
     "CostQuery": "repro.core.costs",

@@ -46,7 +46,7 @@ class CostQuery:
     """Hashable description of one fork-join decision problem.
 
     ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard |
-    serve | serve_macro | serve_shard.
+    serve | serve_macro | serve_shard | serve_admit.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -359,6 +359,46 @@ class CostEngine:
                         alternatives=tuple(cands),
                         value=int(best.strategy.split("_")[1]))
 
+    def _solve_serve_admit(self, q: CostQuery) -> Decision:
+        """Deadline-aware load shedding — the ninth decision site
+        (site=serve_admit ledger rows).
+
+        shape=(active,); params: prompt_len, new_tokens, slack_us /
+        ttft_slack_us (remaining budget in quantized microseconds, None =
+        no deadline), n_slots, flops_per_token, weight_bytes,
+        kv_bytes_per_slot.  The request is ADMITTED iff its predicted
+        residual service time (``serve_admit_cost``: one prefill + its
+        remaining decode steps at post-admit occupancy) fits the remaining
+        total-latency slack AND the prefill alone fits the TTFT slack;
+        otherwise SHED — rejecting before any device work is spent is the
+        cheapest point to manage the overhead.  Baseline = the admit cost
+        itself (shedding costs nothing), so ``predicted_speedup`` reads as
+        the service time a shed verdict avoided."""
+        (active,) = q.shape
+        fpt = float(q.param("flops_per_token", 0.0))
+        wb = float(q.param("weight_bytes", 0.0))
+        kvb = float(q.param("kv_bytes_per_slot", 0.0))
+        prompt_len = int(q.param("prompt_len", 1))
+        new_tokens = int(q.param("new_tokens", 1))
+        admit_cb = self.model.serve_admit_cost(
+            active, prompt_len=prompt_len, new_tokens=new_tokens,
+            flops_per_token=fpt, weight_bytes=wb, kv_bytes_per_slot=kvb,
+            dtype_bytes=q.dtype_bytes)
+        prefill_s, _ = self.model.serve_prefill_cost(
+            prompt_len, prompt_len, flops_per_token=fpt, weight_bytes=wb,
+            dtype_bytes=q.dtype_bytes)
+        slack_us = q.param("slack_us")
+        ttft_slack_us = q.param("ttft_slack_us")
+        admit = True
+        if slack_us is not None and admit_cb.total > float(slack_us) * 1e-6:
+            admit = False
+        if ttft_slack_us is not None and prefill_s > float(ttft_slack_us) * 1e-6:
+            admit = False
+        shed = CostBreakdown("shed", 0.0, 0.0, 0.0, 0.0)
+        return Decision(q, "admit" if admit else "shed",
+                        admit_cb if admit else shed, baseline=admit_cb,
+                        alternatives=(admit_cb, shed), value=admit)
+
     def _solve_serve_shard(self, q: CostQuery) -> Decision:
         """Serve-time shard-vs-replicate — the eighth decision site
         (site=serve_shard ledger rows).
@@ -486,6 +526,25 @@ class CostEngine:
             weight_bytes=int(weight_bytes),
             kv_bytes_per_slot=int(kv_bytes_per_slot)), record=record)
 
+    def decide_serve_admit(self, active: int, *, n_slots: int,
+                           prompt_len: int, new_tokens: int,
+                           slack_us: Optional[int], ttft_slack_us: Optional[int],
+                           flops_per_token: float, weight_bytes: float,
+                           kv_bytes_per_slot: float = 0,
+                           dtype_bytes: int = 2) -> Decision:
+        """Admit-vs-shed for a deadlined request taking a free slot.  Slacks
+        arrive pre-quantized (scheduler ``_quantize_us``) so the memoized
+        cache stays bounded while budgets count down."""
+        return self.query(CostQuery.make(
+            "serve_admit", (active,), dtype_bytes=dtype_bytes,
+            n_slots=int(n_slots), prompt_len=int(prompt_len),
+            new_tokens=int(new_tokens),
+            slack_us=None if slack_us is None else int(slack_us),
+            ttft_slack_us=None if ttft_slack_us is None else int(ttft_slack_us),
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_slot=int(kv_bytes_per_slot)))
+
     def decide_serve_shard(self, batch: int, *, tp: int,
                            flops_per_token: float, weight_bytes: float,
                            kv_bytes_per_slot: float = 0, n_layers: int = 1,
@@ -519,6 +578,16 @@ class CostEngine:
     def cache_stats(self) -> Dict[str, int]:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
                 "size": len(self._cache)}
+
+    def drift_report(self, *, window: int = 20,
+                     threshold: float = 3.0) -> Dict[str, Dict[str, Any]]:
+        """Per-site calibration drift over the trailing ``window`` measured
+        rows: geometric-mean measured/predicted ratio, flagged ``drifting``
+        when it leaves [1/threshold, threshold].  The first concrete step of
+        closing the ledger loop — a drifting site means the calibrated
+        HardwareSpec no longer describes the running backend and
+        re-calibration is warranted (surfaced by ``ledger.report()``)."""
+        return self.ledger.drift(window=window, threshold=threshold)
 
 
 # ---------------------------------------------------------------------------

@@ -130,15 +130,59 @@ class OverheadLedger:
                 sum(ratios) / len(ratios) if ratios else None,
         }
 
-    def report(self, *, max_rows: int = 40) -> str:
-        """One human-readable report: the summary counts followed by the
-        predicted-vs-measured table — what ``runtime.ledger.report()``
-        prints at the end of a session."""
+    def drift(self, *, window: int = 20,
+              threshold: float = 3.0) -> Dict[str, Dict[str, Any]]:
+        """Per-site calibration drift: geometric-mean measured/predicted
+        ratio over each site's trailing ``window`` measured rows.
+
+        A site is flagged ``drifting`` when that mean leaves
+        [1/threshold, threshold] — the analytic model (on its calibrated
+        HardwareSpec) no longer predicts what the backend actually does
+        there, so the prediction is steering decisions open-loop again.
+        Only the trailing window counts, so compile-inflated warmup rows
+        age out instead of flagging a healthy steady state.  Geometric
+        mean because ratios are multiplicative: 4x-over and 4x-under
+        should cancel, not average to 2x-over."""
+        import math
+
+        by_site: Dict[str, List[float]] = {}
+        for e in self.measured_entries():
+            r = e.ratio
+            if r is not None and r > 0:
+                by_site.setdefault(e.site, []).append(r)
+        out: Dict[str, Dict[str, Any]] = {}
+        for site, ratios in sorted(by_site.items()):
+            tail = ratios[-window:]
+            gmean = math.exp(sum(math.log(r) for r in tail) / len(tail))
+            out[site] = {
+                "n": len(tail),
+                "geomean_ratio": gmean,
+                "drifting": not (1.0 / threshold <= gmean <= threshold),
+                "threshold": threshold,
+            }
+        return out
+
+    def report(self, *, max_rows: int = 40, drift_window: int = 20,
+               drift_threshold: float = 3.0) -> str:
+        """One human-readable report: the summary counts, the
+        predicted-vs-measured table, and per-site drift warnings — what
+        ``runtime.ledger.report()`` prints at the end of a session."""
         s = self.summary()
         head = (f"overhead ledger: {s['decisions']} decisions "
                 f"({s['recorded']} recorded, {s['dropped']} dropped), "
                 f"{s['measured']} with measured wall time")
-        return head + "\n" + self.table(max_rows=max_rows)
+        out = head + "\n" + self.table(max_rows=max_rows)
+        drift = self.drift(window=drift_window, threshold=drift_threshold)
+        drifting = {k: v for k, v in drift.items() if v["drifting"]}
+        if drifting:
+            lines = ["", f"!! calibration drift (last {drift_window} measured "
+                         f"rows per site, threshold {drift_threshold:g}x):"]
+            for site, d in drifting.items():
+                lines.append(f"!!   {site}: measured/predicted geomean "
+                             f"{d['geomean_ratio']:.2f}x over {d['n']} rows "
+                             f"— re-calibration warranted")
+            out += "\n".join(lines)
+        return out
 
     def table(self, *, measured_only: bool = False, max_rows: int = 40) -> str:
         """Predicted-vs-measured table (the paper's comparative tables,

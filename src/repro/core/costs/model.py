@@ -358,6 +358,36 @@ class OverheadModel:
                              2 * max(n_layers, 1) * per_layer,
                              self.hw.kernel_launch_s)
 
+    def serve_admit_cost(self, active: int, *, prompt_len: int,
+                         new_tokens: int, flops_per_token: float,
+                         weight_bytes: float, kv_bytes_per_slot: float = 0,
+                         dtype_bytes: int = 2) -> CostBreakdown:
+        """Expected residual service time if this request is admitted NOW:
+        one full prefill of its prompt plus ``new_tokens`` decode steps at
+        the post-admission occupancy (``active + 1`` slots), amortized to
+        this request's share of each batched step.
+
+        This is the serve_admit term: admission control compares it against
+        the request's remaining deadline slack and sheds work that cannot
+        finish in time — spending the prefill + decode cost anyway would be
+        pure overhead (the paper's thesis applied to load shedding)."""
+        total_prefill, _ = self.serve_prefill_cost(
+            prompt_len, prompt_len, flops_per_token=flops_per_token,
+            weight_bytes=weight_bytes, dtype_bytes=dtype_bytes)
+        occupancy = max(active, 0) + 1
+        step = self.serve_decode_step_cost(
+            occupancy, flops_per_token=flops_per_token,
+            weight_bytes=weight_bytes, kv_bytes_per_slot=kv_bytes_per_slot,
+            dtype_bytes=dtype_bytes)
+        n = max(new_tokens, 1)
+        return CostBreakdown(
+            f"admit_b{occupancy}",
+            total_prefill + n * step.compute,
+            n * step.memory,
+            0.0,
+            n * step.fixed,
+        )
+
     def serve_prefill_cost(self, prompt_len: int, chunk: int, *,
                            flops_per_token: float, weight_bytes: float,
                            dtype_bytes: int = 2):

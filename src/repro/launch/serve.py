@@ -61,7 +61,39 @@ def main(argv=None):
                          "decision site), the others force a verdict")
     ap.add_argument("--eos-id", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request total-latency budget from arrival; "
+                         "infeasible requests shed (REJECTED), over-budget "
+                         "ones evicted at macro-step boundaries (TIMED_OUT)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded waiting queue: arrivals past the limit "
+                         "bounce with a typed REJECTED (backpressure)")
+    ap.add_argument("--inject-fault", choices=("raise", "nan", "stall"),
+                    default=None,
+                    help="failure drill: inject one device-step fault of "
+                         "this class ('stall' needs --watchdog-ms)")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="abort any single device step exceeding this "
+                         "(bounded retries, then in-flight requests FAIL)")
     args = ap.parse_args(argv)
+
+    # fail-fast flag validation (mirrors Runtime.serve, but at the CLI
+    # boundary so a bad invocation dies before any compile)
+    robustness = (args.deadline_ms is not None or args.queue_limit is not None
+                  or args.inject_fault is not None
+                  or args.watchdog_ms is not None)
+    if robustness and args.engine != "continuous":
+        ap.error("--deadline-ms/--queue-limit/--inject-fault/--watchdog-ms "
+                 "need the request lifecycle of --engine continuous")
+    if args.deadline_ms is not None and args.deadline_ms <= 0:
+        ap.error(f"--deadline-ms must be > 0, got {args.deadline_ms}")
+    if args.queue_limit is not None and args.queue_limit < 1:
+        ap.error(f"--queue-limit must be >= 1, got {args.queue_limit}")
+    if args.watchdog_ms is not None and args.watchdog_ms <= 0:
+        ap.error(f"--watchdog-ms must be > 0, got {args.watchdog_ms}")
+    if args.inject_fault == "stall" and args.watchdog_ms is None:
+        ap.error("--inject-fault stall without --watchdog-ms would hang "
+                 "the trace; pass --watchdog-ms")
 
     mesh_shape = None
     if args.mesh is not None:
@@ -100,9 +132,14 @@ def main(argv=None):
                  slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
                  prefill_chunk=args.prefill_chunk, macro_step=args.macro_step,
                  mesh_shape=mesh_shape if mode == "continuous" else None,
-                 shard_params=args.serve_shard)
+                 shard_params=args.serve_shard,
+                 queue_limit=args.queue_limit, deadline_ms=args.deadline_ms,
+                 inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms)
         for mode in modes
     ]
+
+    def ms(v):
+        return f"{v*1e3:6.0f}ms" if v is not None else "     --"
 
     for res in results:
         print(f"[{res.mode}] wall {res.wall_s:.2f}s  "
@@ -116,22 +153,33 @@ def main(argv=None):
                 print(f"    mesh {res.report.mesh_shape} "
                       f"({res.report.device_count} devices), "
                       f"collective ops {res.report.collective_ops}")
+            states = res.report.state_counts()
+            extras = "".join(
+                f", {k} {v}" for k, v in (
+                    ("retries", res.report.step_retries),
+                    ("watchdog fires", res.report.watchdog_fires),
+                    ("preemptions", res.report.preemptions)) if v)
+            print(f"    states {states}{extras}")
             for r in res.report.requests:
-                print(f"    {r.rid}: arrival {r.arrival_s*1e3:6.0f}ms  "
-                      f"queue {r.queue_wait_s*1e3:6.0f}ms  "
-                      f"ttft {r.ttft_s*1e3:6.0f}ms  "
-                      f"latency {r.latency_s*1e3:6.0f}ms  "
-                      f"tokens {len(r.tokens)}")
+                why = f"  [{r.reason}]" if r.reason else ""
+                print(f"    {r.rid}: {r.state.value:9s} "
+                      f"arrival {r.arrival_s*1e3:6.0f}ms  "
+                      f"queue {ms(r.queue_wait_s)}  "
+                      f"ttft {ms(r.ttft_s)}  "
+                      f"latency {ms(r.latency_s)}  "
+                      f"tokens {len(r.tokens)}{why}")
 
     serve_rows = [e for e in rt.ledger.entries
-                  if e.site in ("serve", "serve_macro", "serve_shard")]
+                  if e.site in ("serve", "serve_macro", "serve_shard",
+                                "serve_admit")]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")
     # tail: the head is warmup rows whose measured times include jit compile
     for e in serve_rows[-12:]:
         op = e.query.get("op", {"serve_macro": "macro_horizon",
-                                "serve_shard": "serve_shard"}.get(e.site, "?"))
+                                "serve_shard": "serve_shard",
+                                "serve_admit": "serve_admit"}.get(e.site, "?"))
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
         print(f"    {op:14s} {e.choice:14s} "
               f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")

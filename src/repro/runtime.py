@@ -319,6 +319,11 @@ class Runtime:
               pad_id: Optional[int] = None, prefill_chunk="auto",
               macro_step="auto", mesh_shape: Optional[Dict[str, int]] = None,
               shard_params: str = "auto", warmup: bool = True,
+              queue_limit: Optional[int] = None,
+              deadline_ms: Optional[float] = None,
+              ttft_deadline_ms: Optional[float] = None,
+              inject_fault: Optional[str] = None,
+              watchdog_ms: Optional[float] = None, max_retries: int = 2,
               now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
@@ -334,6 +339,18 @@ class Runtime:
         decision, forced with ``shard_params='shard'``/``'replicate'``.
         The axis sizes must divide the arch's head/FFN dims and multiply
         to the visible device count.
+
+        Robustness (continuous mode only; DESIGN.md §8): ``queue_limit``
+        bounds the waiting queue (overflow -> typed REJECTED backpressure);
+        ``deadline_ms``/``ttft_deadline_ms`` apply a default per-request
+        latency budget to requests that don't carry their own (enforced at
+        admission via the ``serve_admit`` CostQuery and at macro-step
+        boundaries -> TIMED_OUT); ``inject_fault`` arms one injected device
+        fault of the named class (``raise`` | ``nan`` | ``stall``) for
+        failure drills; ``watchdog_ms`` bounds any single device step
+        (required for ``stall``), with up to ``max_retries`` backoff
+        retries before in-flight requests FAIL.
+
         ``static`` is the lockstep baseline: the batch forms at the last
         arrival and every request's latency includes that wait; it requires
         equal-length prompts.  ``params=None`` initializes fresh parameters
@@ -345,9 +362,37 @@ class Runtime:
         from repro.models import build_model
         from repro.serving import ContinuousServeEngine, ServeEngine
         from repro.serving.engine import emitted_count
+        from repro.serving.faults import FaultInjector, FaultSpec
 
         if not trace:
             raise ValueError("serve() needs a non-empty trace of Requests")
+        # fail-fast robustness-flag validation (before any compile/init)
+        if inject_fault is not None and inject_fault not in ("raise", "nan",
+                                                             "stall"):
+            raise ValueError(
+                f"inject_fault must be 'raise', 'nan' or 'stall', got "
+                f"{inject_fault!r}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if ttft_deadline_ms is not None and ttft_deadline_ms <= 0:
+            raise ValueError(
+                f"ttft_deadline_ms must be > 0, got {ttft_deadline_ms}")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        if watchdog_ms is not None and watchdog_ms <= 0:
+            raise ValueError(f"watchdog_ms must be > 0, got {watchdog_ms}")
+        if inject_fault == "stall" and watchdog_ms is None:
+            raise ValueError(
+                "inject_fault='stall' without watchdog_ms would hang the "
+                "trace for the stall duration; pass watchdog_ms")
+        robustness = any(v is not None for v in (
+            queue_limit, deadline_ms, ttft_deadline_ms, inject_fault,
+            watchdog_ms))
+        if mode == "static" and robustness:
+            raise ValueError(
+                "queue_limit/deadline/fault/watchdog options need the "
+                "request lifecycle of mode='continuous'; the static "
+                "lockstep baseline has no per-request scheduling")
         mesh = None
         if mesh_shape is not None:
             from repro.distributed.sharding import validate_serve_mesh
@@ -408,11 +453,29 @@ class Runtime:
                 outputs, engine=engine)
 
         if mode == "continuous":
+            # default deadlines apply to requests that don't carry their own
+            if deadline_ms is not None or ttft_deadline_ms is not None:
+                for r in trace:
+                    if deadline_ms is not None and r.deadline_s is None:
+                        r.deadline_s = deadline_ms / 1e3
+                    if (ttft_deadline_ms is not None
+                            and r.ttft_deadline_s is None):
+                        r.ttft_deadline_s = ttft_deadline_ms / 1e3
+            injector = None
+            if inject_fault is not None:
+                # one fault partway into the trace (after the second macro
+                # step / first prefill group), long enough stall to need
+                # the watchdog
+                site = "macro"
+                stall_s = (watchdog_ms or 0) / 1e3 * 20 + 1.0
+                injector = FaultInjector((FaultSpec(
+                    inject_fault, site=site, after=2, stall_s=stall_s),))
             engine = ContinuousServeEngine(
                 model, params, n_slots=slots, max_len=max_len, eos_id=eos_id,
                 pad_id=pad_id, cost_engine=self.engine,
                 prefill_chunk=prefill_chunk, macro_step=macro_step,
-                mesh=mesh, shard_params=shard_params)
+                mesh=mesh, shard_params=shard_params,
+                queue_limit=queue_limit, max_retries=max_retries)
             if warmup:
                 # compile prefill (shape keys on the trace-wide max prompt
                 # length every group pads to) AND every macro horizon the
@@ -421,6 +484,11 @@ class Runtime:
                 engine.warmup(max(r.prompt_len for r in trace),
                               max_new_tokens=max(r.max_new_tokens
                                                  for r in trace))
+            # arm the watchdog + injector only AFTER warmup: first-call
+            # compiles legitimately take seconds and must not trip either
+            engine.watchdog_s = (None if watchdog_ms is None
+                                 else watchdog_ms / 1e3)
+            engine.injector = injector
             report = engine.run(trace, now_fn=now_fn)
             pct = report.latency_percentiles()
             return ServeResult(

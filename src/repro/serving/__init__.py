@@ -3,12 +3,16 @@
 engine.py    — ServeEngine (fixed-batch anchor, one-call batched prefill)
                and ContinuousServeEngine (slot-pooled, K-token macro-step
                decode, group-batched prefill, CostEngine-scheduled,
-               host-sync/dispatch accounted)
+               host-sync/dispatch accounted, fault-tolerant: deadlines,
+               preemption, bounded queue, watchdogged retries)
 slots.py     — SlotPool: per-slot insert/reset/evict of pooled decode state
-               (donated buffers, host occupancy/position mirrors)
-scheduler.py — Request queue + ServeScheduler (site=serve / serve_macro
-               CostEngine decisions: admission, prefill chunk, macro
-               horizon)
+               (donated buffers, host occupancy/position mirrors, drain()
+               failure-path reset)
+scheduler.py — Request lifecycle state machine + ServeScheduler (site=serve
+               / serve_macro / serve_admit CostEngine decisions: admission,
+               prefill chunk, macro horizon, deadline-aware load shedding)
+faults.py    — FaultSpec/FaultInjector (raise | nan | stall) + guarded_call
+               (watchdog + bounded retry-with-backoff around device steps)
 """
 
 from repro.serving.engine import (  # noqa: F401
@@ -17,9 +21,20 @@ from repro.serving.engine import (  # noqa: F401
     ServeReport,
     emitted_count,
 )
+from repro.serving.faults import (  # noqa: F401
+    FatalFault,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    StepFailed,
+    guarded_call,
+)
 from repro.serving.scheduler import (  # noqa: F401
+    InvalidRequestError,
     Request,
+    RequestState,
     ServeScheduler,
     supports_chunked_prefill,
+    validate_request,
 )
 from repro.serving.slots import SlotPool  # noqa: F401

@@ -44,10 +44,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.costs.engine import CostEngine
 from repro.models.model import Model, mrope_positions
+from repro.serving.faults import FaultInjector, StepFailed, guarded_call
 from repro.serving.scheduler import (
     Request,
+    RequestState,
     ServeScheduler,
     supports_chunked_prefill,
+    validate_request,
 )
 from repro.serving.slots import SlotPool
 from repro.training.step import (
@@ -182,6 +185,26 @@ class ServeReport:
     mesh_shape: Optional[Dict[str, int]] = None
     device_count: int = 1
     collective_ops: int = 0
+    # failure-path accounting (all zero on an unperturbed trace)
+    step_retries: int = 0
+    watchdog_fires: int = 0
+
+    def state_counts(self) -> Dict[str, int]:
+        """How many requests ended in each lifecycle state."""
+        counts: Dict[str, int] = {}
+        for r in self.requests:
+            counts[r.state.value] = counts.get(r.state.value, 0) + 1
+        return counts
+
+    @property
+    def all_terminal(self) -> bool:
+        """The drain invariant: a finished run leaves NO request in a
+        non-terminal state, whatever faults fired."""
+        return all(r.state.terminal for r in self.requests)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.requests)
 
     def output(self, rid: str, max_new_tokens: Optional[int] = None) -> np.ndarray:
         req = next(r for r in self.requests if r.rid == rid)
@@ -222,6 +245,11 @@ class ServeReport:
             "mesh_shape": self.mesh_shape,
             "device_count": self.device_count,
             "collective_ops": self.collective_ops,
+            "states": self.state_counts(),
+            "all_terminal": self.all_terminal,
+            "step_retries": self.step_retries,
+            "watchdog_fires": self.watchdog_fires,
+            "preemptions": self.preemptions,
             **self.latency_percentiles(),
             "requests": [
                 {
@@ -232,6 +260,10 @@ class ServeReport:
                     "queue_wait_s": r.queue_wait_s,
                     "ttft_s": r.ttft_s,
                     "latency_s": r.latency_s,
+                    "state": r.state.value,
+                    "reason": r.reason,
+                    "preemptions": r.preemptions,
+                    "retries": r.retries,
                 }
                 for r in self.requests
             ],
@@ -264,12 +296,31 @@ class ContinuousServeEngine:
                  cost_engine: Optional[CostEngine] = None,
                  prefill_chunk: Union[str, int] = "auto",
                  macro_step: Union[str, int] = "auto",
-                 mesh=None, shard_params: str = "auto"):
+                 mesh=None, shard_params: str = "auto",
+                 queue_limit: Optional[int] = None,
+                 watchdog_s: Optional[float] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.01,
+                 injector: Optional[FaultInjector] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.eos_id = eos_id
         self.pad_id = eos_id if pad_id is None else pad_id
+        # --- robustness knobs (all default OFF: the unperturbed hot path
+        # stays thread-free with zero extra queries or host syncs) ---
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0, got {watchdog_s}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.queue_limit = queue_limit
+        self.watchdog_s = watchdog_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.injector = injector
+        self.step_retries = 0  # engine-lifetime; reports carry deltas
+        self.watchdog_fires = 0
         if prefill_chunk != "auto":
             prefill_chunk = int(prefill_chunk)
         self.prefill_chunk = prefill_chunk
@@ -377,70 +428,146 @@ class ContinuousServeEngine:
 
     # ------------------------------------------------------------------
 
+    def _dispatch(self, site: str, thunk, touched: List[Request]):
+        """Execute one device-step thunk.  Without an injector or watchdog
+        this is a DIRECT call — the unperturbed hot path stays thread-free.
+        With either, the step runs under ``guarded_call``: injected faults
+        fire, the watchdog bounds a stall, transient failures retry with
+        backoff (counted onto the engine and the ``touched`` requests), and
+        exhaustion/abandonment surfaces as ``StepFailed`` for ``run()`` to
+        convert into per-request FAILED + a pool drain."""
+        if self.injector is None and not self.watchdog_s:
+            return thunk(None)
+
+        def before_thunk(cancel):
+            if self.injector is not None:
+                self.injector.before(site, cancel)
+            return thunk(cancel)
+
+        def on_retry(attempt, err):
+            self.step_retries += 1
+            for r in touched:
+                r.retries += 1
+
+        def on_watchdog(attempt):
+            self.watchdog_fires += 1
+
+        return guarded_call(
+            before_thunk, watchdog_s=self.watchdog_s,
+            retries=self.max_retries, backoff_s=self.retry_backoff_s,
+            on_retry=on_retry, on_watchdog=on_watchdog)
+
+    def _fail_inflight(self, reqs: List[Request], t: float,
+                       reason: str) -> None:
+        """Failure path: mark ``reqs`` FAILED and restore an empty, valid,
+        donation-ready pool (drain falls back to reinit if an abandoned
+        step consumed the donated buffers)."""
+        for r in reqs:
+            if not r.state.terminal:
+                r.mark(RequestState.FAILED, t, reason=reason)
+        self.pool.drain()
+        self._last_tok[:] = self.pad_id
+        self._budget[:] = 0
+        self._last_macro_key = None
+
     def _admit_group(self, reqs: List[Request], now) -> None:
         """Admit a group of requests with ONE batched prefill lowered
         directly into their pooled slots (no single-slot state + insert
         copy, one host sync for the whole group).  ``now`` is the run
         clock: first tokens are stamped AFTER prefill returns, so TTFT
-        includes the prefill wall time."""
+        includes the prefill wall time.
+
+        A request re-admitted after preemption prefills prompt + the
+        tokens it already generated: greedy decode is deterministic, so
+        the continuation is token-identical to an uninterrupted run (its
+        original ``admitted_s`` / ``first_token_s`` stamps are kept)."""
         slots = [self.pool.acquire(r) for r in reqs]
-        lmax = max([r.prompt_len for r in reqs] + [self._group_pad or 0])
+        prompts = [np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(r.tokens, np.int32)])
+                   if r.tokens else np.asarray(r.prompt, np.int32)
+                   for r in reqs]
+        lmax = max([int(p.shape[-1]) for p in prompts]
+                   + [self._group_pad or 0])
         override = None if self.prefill_chunk == "auto" else self.prefill_chunk
         chunk, dec = self.scheduler.prefill_chunk(
             lmax, active_decodes=self.pool.active_count - len(reqs),
             override=override)
         tokens = np.zeros((self.pool.n_slots, lmax), np.int32)
         lengths = np.zeros((self.pool.n_slots,), np.int32)
-        for r, s in zip(reqs, slots):
-            r.admitted_s = now()
-            tokens[s, : r.prompt_len] = np.asarray(r.prompt, np.int32)
-            lengths[s] = r.prompt_len
+        t_adm = now()
+        for r, s, p in zip(reqs, slots, prompts):
+            if r.admitted_s is None:
+                r.admitted_s = t_adm
+            r.mark(RequestState.PREFILLING, t_adm)
+            tokens[s, : p.shape[-1]] = p
+            lengths[s] = p.shape[-1]
         chunks = jnp.asarray(_prefill_chunks(tokens, chunk))
         lens = jnp.asarray(lengths)
         self.collective_ops += self._count_collectives(
             ("prefill", chunks.shape), self._prefill,
             self.params, self.pool.state, chunks, lens)
+
+        def thunk(cancel):
+            first, new_state = self._prefill(
+                self.params, self.pool.state, chunks, lens)
+            # ONE host sync for the whole group; syncing INSIDE the guarded
+            # call means the watchdog covers the device execution, not just
+            # the async dispatch
+            return np.asarray(first), new_state
+
         t0 = time.perf_counter()
-        first, self.pool.state = self._prefill(
-            self.params, self.pool.state, chunks, lens)
-        first_np = np.asarray(first)  # ONE host sync for the whole group
+        first_np, self.pool.state = self._dispatch("prefill", thunk, reqs)
         dt = time.perf_counter() - t0
         self.device_dispatches += 1
         self.host_syncs += 1
         self.scheduler.record_measured(
             dec, dt, note=f"prefill group={len(reqs)} len={lmax} chunk={chunk}")
         t_first = now()
-        for r, s in zip(reqs, slots):
+        for r, s, p in zip(reqs, slots, prompts):
             tk = int(first_np[s])
             r.tokens.append(tk)
-            r.first_token_s = t_first
-            self.pool.set_pos(s, r.prompt_len)
-            if tk == self.eos_id or r.max_new_tokens <= 1:
-                r.finish_s = t_first
+            if r.first_token_s is None:
+                r.first_token_s = t_first
+            self.pool.set_pos(s, int(p.shape[-1]))
+            if tk == self.eos_id or len(r.tokens) >= r.max_new_tokens:
+                r.mark(RequestState.COMPLETED, t_first)
                 self.pool.release(s)
                 self._last_tok[s] = self.pad_id
                 self._budget[s] = 0
             else:
+                r.mark(RequestState.DECODING, t_first)
                 self._last_tok[s] = tk
-                self._budget[s] = r.max_new_tokens - 1
+                self._budget[s] = r.max_new_tokens - len(r.tokens)
 
     # ------------------------------------------------------------------
 
     def run(self, requests: List[Request],
             now_fn=time.perf_counter) -> ServeReport:
-        """Run a request trace to completion.  ``now_fn`` is injectable so
-        tests can pin a virtual clock (arrivals then resolve instantly)."""
+        """Run a request trace to completion: every request reaches a
+        terminal lifecycle state (the drain invariant), whatever deadlines,
+        preemptions or injected faults fire along the way.  ``now_fn`` is
+        injectable so tests can pin a virtual clock (arrivals then resolve
+        instantly).
+
+        An unperturbed trace — no deadlines, uniform priorities, no
+        injector/watchdog — takes EXACTLY the pre-lifecycle path: the same
+        CostQuery sequence, the same dispatches, zero extra host syncs, and
+        therefore bit-identical tokens."""
         for r in requests:
-            _check_fits(r.prompt_len, r.max_new_tokens, self.max_len,
-                        f"request {r.rid!r}")
-            r.tokens = []
-            r.admitted_s = r.first_token_s = r.finish_s = None
+            validate_request(r, self.max_len)  # typed, names the rid
+            r.reset_lifecycle()
         self._group_pad = max((r.prompt_len for r in requests), default=0)
-        queue = deque(sorted(requests, key=lambda r: r.arrival_s))  # stable
+        # deadline/priority machinery only engages when a request asks
+        any_deadlines = any(r.deadline_s is not None
+                            or r.ttft_deadline_s is not None
+                            for r in requests)
+        pending = deque(sorted(requests, key=lambda r: r.arrival_s))  # stable
+        waiting: List[Request] = []  # arrived, QUEUED (incl. re-queued)
         active: Dict[int, Request] = {}
         sync0 = self.host_syncs
         disp0 = self.device_dispatches + self.pool.dispatch_count
         col0 = self.collective_ops
+        ret0, wd0 = self.step_retries, self.watchdog_fires
         # attach ONE measured wall time per run to the serve_shard row (the
         # first macro-step, normalized per decode step)
         self._shard_pending = self._shard_decision is not None
@@ -448,94 +575,234 @@ class ContinuousServeEngine:
         offset = 0.0  # event-skip accumulator for frozen (virtual) clocks
         now = lambda: now_fn() - t0 + offset  # noqa: E731
 
-        while queue or active:
-            # --- admission (one batched prefill per admitted group) ---
-            while queue and self.pool.free_count:
-                t = now()
-                arrived = sum(1 for r in queue if r.arrival_s <= t)
-                if not arrived:
-                    break
-                n_admit, _ = self.scheduler.admission(
-                    active=self.pool.active_count, waiting=arrived,
-                    free_slots=self.pool.free_count)
-                if n_admit <= 0:
-                    break
-                group = [queue.popleft() for _ in range(
-                    min(n_admit, self.pool.free_count, arrived))]
-                self._admit_group(group, now)
-                active = {s: self.pool.owner(s)
-                          for s in self.pool.active_slots()}
-            if not active:
-                if queue:
-                    wait = queue[0].arrival_s - now()
-                    if wait > 0:
-                        before = now()
-                        time.sleep(min(wait, 0.05))
-                        if now() <= before:
-                            # pinned test clock: jump straight to the next
-                            # arrival instead of sleeping forever
-                            offset += wait
-                continue
+        def intake(t: float) -> None:
+            """Move arrived requests into the waiting queue, bouncing off a
+            full bounded queue (backpressure -> typed REJECTED) and expiring
+            deadlines that lapsed while QUEUED."""
+            while pending and pending[0].arrival_s <= t:
+                r = pending.popleft()
+                if (self.queue_limit is not None
+                        and len(waiting) >= self.queue_limit):
+                    r.mark(RequestState.REJECTED, t, reason="queue_full")
+                    continue
+                waiting.append(r)
+            if any_deadlines:
+                still = []
+                for r in waiting:
+                    if (r.deadline_s is not None
+                            and t - r.arrival_s > r.deadline_s):
+                        r.mark(RequestState.TIMED_OUT, t,
+                               reason="deadline expired while queued")
+                    else:
+                        still.append(r)
+                waiting[:] = still
 
-            # --- one K-token macro-step over the pool ---
-            batch_size = len(active)
-            remaining = tuple(sorted(int(self._budget[s]) for s in active))
-            override = None if self.macro_step == "auto" else self.macro_step
-            # key on the same budget clipping the CostEngine applies, so
-            # repeat compositions dedupe instead of re-recording as every
-            # budget decrements
-            cap = max(self.scheduler.macro_candidates) if override is None \
-                else override
-            key = (batch_size, tuple(min(r, cap) for r in remaining))
-            horizon, dec = self.scheduler.macro_horizon(
-                remaining, override=override,
-                record=key != self._last_macro_key)
-            self._last_macro_key = key
-            mask = self.pool.active_mask()
-            macro_fn = self._macro(horizon)
-            tok_in = jnp.asarray(self._last_tok)
-            mask_in = jnp.asarray(mask)
-            budget_in = jnp.asarray(self._budget)
-            self.collective_ops += self._count_collectives(
-                ("macro", horizon), macro_fn,
-                self.params, self.pool.state, tok_in, mask_in, budget_in)
-            t_step = time.perf_counter()
-            emitted, self.pool.state = macro_fn(
-                self.params, self.pool.state, tok_in, mask_in, budget_in)
-            em = np.asarray(emitted)  # THE host sync for K tokens
-            dt_step = time.perf_counter() - t_step
-            self.device_dispatches += 1
-            self.host_syncs += 1
-            self.scheduler.record_measured(
-                dec, dt_step, note=f"macro K={horizon} b={batch_size}")
-            if self._shard_pending:
-                self.scheduler.record_measured(
-                    self._shard_decision, dt_step / horizon,
-                    note=f"serve_shard tp={self.tp} per-step from macro "
-                         f"K={horizon} b={batch_size}")
-                self._shard_pending = False
-            t_emit = now()
-            for slot in list(active):
-                req = active[slot]
-                n_before = len(req.tokens)
-                finished = False
-                for j in range(horizon):
-                    tk = int(em[slot, j])
-                    req.tokens.append(tk)
-                    if tk == self.eos_id or len(req.tokens) >= req.max_new_tokens:
-                        finished = True
+        try:
+            while pending or waiting or active:
+                # intake runs even when the pool is saturated, so bounded-
+                # queue backpressure and queued-deadline expiry act on
+                # arrival, not on the next free slot
+                intake(now())
+                # --- admission (one batched prefill per admitted group) ---
+                while (pending or waiting) and self.pool.free_count:
+                    t = now()
+                    intake(t)
+                    if not waiting:
                         break
-                n_emitted = len(req.tokens) - n_before
-                self.pool.advance(slot, n_emitted)  # before release zeroes it
-                if finished:
-                    req.finish_s = t_emit
-                    self.pool.release(slot)
-                    self._last_tok[slot] = self.pad_id
-                    self._budget[slot] = 0
-                    del active[slot]
-                else:
-                    self._last_tok[slot] = int(em[slot, horizon - 1])
-                    self._budget[slot] -= n_emitted
+                    n_admit, _ = self.scheduler.admission(
+                        active=self.pool.active_count, waiting=len(waiting),
+                        free_slots=self.pool.free_count)
+                    if n_admit <= 0:
+                        break
+                    # stable sort: priority first, then arrival order — at
+                    # uniform priority this IS the original FIFO order
+                    waiting.sort(key=lambda r: (-r.priority, r.arrival_s))
+                    group: List[Request] = []
+                    want = min(n_admit, self.pool.free_count, len(waiting))
+                    while len(group) < want and waiting:
+                        r = waiting[0]
+                        if (r.deadline_s is not None
+                                or r.ttft_deadline_s is not None):
+                            ok, _ = self.scheduler.serve_admit(
+                                r, now=t,
+                                active=self.pool.active_count + len(group),
+                                n_slots=self.pool.n_slots)
+                            if not ok:
+                                waiting.pop(0)
+                                r.mark(RequestState.REJECTED, t,
+                                       reason="deadline_infeasible")
+                                continue
+                        group.append(waiting.pop(0))
+                    if not group:
+                        continue  # everything at the head was shed
+                    try:
+                        self._admit_group(group, now)
+                    except StepFailed as e:
+                        # prefill died (retries exhausted or abandoned):
+                        # the donated pool state is suspect — fail the
+                        # group AND anything in flight, drain, keep serving
+                        self._fail_inflight(
+                            group + list(active.values()), now(),
+                            reason=f"prefill step failed: {e}")
+                        active = {}
+                        continue
+                    active = {s: self.pool.owner(s)
+                              for s in self.pool.active_slots()}
+
+                # --- priority preemption: a strictly-higher-priority
+                # waiter evicts the lowest-priority active slot (the
+                # victim re-queues and later re-prefills prompt+generated,
+                # so its greedy output is unchanged).  Never fires at
+                # uniform priority — the unperturbed path skips it all.
+                if (waiting and active and not self.pool.free_count
+                        and max(r.priority for r in waiting)
+                        > min(r.priority for r in active.values())):
+                    t = now()
+                    victim_slot = min(
+                        active, key=lambda s: (active[s].priority, -s))
+                    victim = active.pop(victim_slot)
+                    self.pool.release(victim_slot)
+                    self._last_tok[victim_slot] = self.pad_id
+                    self._budget[victim_slot] = 0
+                    self._last_macro_key = None
+                    victim.preemptions += 1
+                    victim.mark(RequestState.PREEMPTED, t)
+                    victim.mark(RequestState.QUEUED, t)
+                    waiting.append(victim)
+                    continue  # admission loop fills the freed slot
+
+                if not active:
+                    if waiting:
+                        continue  # admission re-runs (sheds/admits)
+                    if pending:
+                        wait = pending[0].arrival_s - now()
+                        if wait > 0:
+                            before = now()
+                            time.sleep(min(wait, 0.05))
+                            if now() <= before:
+                                # pinned test clock: jump straight to the
+                                # next arrival instead of sleeping forever
+                                offset += wait
+                    continue
+
+                # --- one K-token macro-step over the pool ---
+                batch_size = len(active)
+                remaining = tuple(sorted(int(self._budget[s]) for s in active))
+                override = None if self.macro_step == "auto" else self.macro_step
+                # key on the same budget clipping the CostEngine applies, so
+                # repeat compositions dedupe instead of re-recording as every
+                # budget decrements
+                cap = max(self.scheduler.macro_candidates) if override is None \
+                    else override
+                key = (batch_size, tuple(min(r, cap) for r in remaining))
+                horizon, dec = self.scheduler.macro_horizon(
+                    remaining, override=override,
+                    record=key != self._last_macro_key)
+                self._last_macro_key = key
+                mask = self.pool.active_mask()
+                macro_fn = self._macro(horizon)
+                tok_in = jnp.asarray(self._last_tok)
+                mask_in = jnp.asarray(mask)
+                budget_in = jnp.asarray(self._budget)
+                self.collective_ops += self._count_collectives(
+                    ("macro", horizon), macro_fn,
+                    self.params, self.pool.state, tok_in, mask_in, budget_in)
+
+                def thunk(cancel, _fn=macro_fn, _tok=tok_in, _mask=mask_in,
+                          _budget=budget_in):
+                    emitted, new_state = _fn(
+                        self.params, self.pool.state, _tok, _mask, _budget)
+                    # THE host sync for K tokens, inside the guard so the
+                    # watchdog covers device execution, not just dispatch
+                    return np.asarray(emitted), new_state
+
+                t_step = time.perf_counter()
+                try:
+                    em, self.pool.state = self._dispatch(
+                        "macro", thunk, list(active.values()))
+                except StepFailed as e:
+                    self._fail_inflight(list(active.values()), now(),
+                                        reason=f"macro step failed: {e}")
+                    active = {}
+                    continue
+                dt_step = time.perf_counter() - t_step
+                self.device_dispatches += 1
+                self.host_syncs += 1
+                self.scheduler.record_measured(
+                    dec, dt_step, note=f"macro K={horizon} b={batch_size}")
+                if self._shard_pending:
+                    self.scheduler.record_measured(
+                        self._shard_decision, dt_step / horizon,
+                        note=f"serve_shard tp={self.tp} per-step from macro "
+                             f"K={horizon} b={batch_size}")
+                    self._shard_pending = False
+                # injected-NaN fault class: NaN logits argmax to garbage
+                # tokens; the injector corrupts the host copy and the
+                # validation below (piggybacked on the macro-step sync the
+                # engine already pays — zero extra syncs) catches it
+                bad_slots: set = set()
+                if self.injector is not None:
+                    em = self.injector.corrupt("macro", em,
+                                               sorted(active))
+                    vocab = self.model.cfg.vocab_size
+                    bad = np.argwhere((em < 0) | (em >= vocab))
+                    bad_slots = {int(s) for s in bad[:, 0]} & set(active)
+                t_emit = now()
+                for slot in list(active):
+                    req = active[slot]
+                    if slot in bad_slots:
+                        # poison output fails THIS request; the other
+                        # slots' device state advanced normally
+                        req.mark(RequestState.FAILED, t_emit,
+                                 reason="corrupt step output (NaN logits)")
+                        self.pool.release(slot)
+                        self._last_tok[slot] = self.pad_id
+                        self._budget[slot] = 0
+                        self._last_macro_key = None
+                        del active[slot]
+                        continue
+                    n_before = len(req.tokens)
+                    finished = False
+                    for j in range(horizon):
+                        tk = int(em[slot, j])
+                        req.tokens.append(tk)
+                        if (tk == self.eos_id
+                                or len(req.tokens) >= req.max_new_tokens):
+                            finished = True
+                            break
+                    n_emitted = len(req.tokens) - n_before
+                    self.pool.advance(slot, n_emitted)  # before release zeroes
+                    if finished:
+                        req.mark(RequestState.COMPLETED, t_emit)
+                        self.pool.release(slot)
+                        self._last_tok[slot] = self.pad_id
+                        self._budget[slot] = 0
+                        del active[slot]
+                    elif (any_deadlines and req.deadline_s is not None
+                          and t_emit - req.arrival_s > req.deadline_s):
+                        # deadlines are enforced at macro-step boundaries:
+                        # evict to TIMED_OUT, free the slot immediately
+                        req.mark(RequestState.TIMED_OUT, t_emit,
+                                 reason="total-latency deadline exceeded "
+                                        "while decoding")
+                        self.pool.release(slot)
+                        self._last_tok[slot] = self.pad_id
+                        self._budget[slot] = 0
+                        self._last_macro_key = None
+                        del active[slot]
+                    else:
+                        self._last_tok[slot] = int(em[slot, horizon - 1])
+                        self._budget[slot] -= n_emitted
+        except BaseException:
+            # abort safety net (fatal faults, KeyboardInterrupt, bugs):
+            # leave the ENGINE reusable — in-flight requests FAILED, pool
+            # drained back to a valid donation-ready state — then re-raise.
+            # PREFILLING catches a group that died mid-_admit_group.
+            inflight = [r for r in requests
+                        if r.state in (RequestState.PREFILLING,
+                                       RequestState.DECODING)]
+            self._fail_inflight(inflight, now(), reason="run aborted")
+            raise
 
         return ServeReport(
             requests=list(requests), wall_s=now(), pad_id=self.pad_id,
@@ -546,7 +813,9 @@ class ContinuousServeEngine:
                         if self.mesh is not None else None),
             device_count=(int(self.mesh.devices.size)
                           if self.mesh is not None else 1),
-            collective_ops=self.collective_ops - col0)
+            collective_ops=self.collective_ops - col0,
+            step_retries=self.step_retries - ret0,
+            watchdog_fires=self.watchdog_fires - wd0)
 
     def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
         """Compile the prefill/decode/reset executables outside any timed

@@ -1,4 +1,4 @@
-"""Request queue + CostEngine-driven serving scheduler.
+"""Request lifecycle + CostEngine-driven serving scheduler.
 
 Every scheduling choice on the serve path — whether to admit waiting
 requests, what prefill chunk length to lower, what the current decode batch
@@ -7,17 +7,50 @@ CostEngine and ledgered as a ``site=serve`` row, exactly like the other
 fork-join decision sites (DESIGN.md §3, §5).  The scheduler never touches
 device state; it hands verdicts to the ContinuousServeEngine, which
 executes them and attaches measured wall times back onto the ledger rows.
+
+Every ``Request`` moves through an explicit state machine (DESIGN.md §8):
+
+    QUEUED -> PREFILLING -> DECODING -> COMPLETED
+       |           |            |
+       |           |            +-> PREEMPTED -> QUEUED (re-prefills
+       |           |            |                prompt + generated)
+       |           |            +-> TIMED_OUT (total-latency deadline)
+       |           +----------------+-> FAILED (unrecoverable step fault)
+       +-> REJECTED (invalid / queue_full / deadline_infeasible)
+       +-> TIMED_OUT (deadline expired while queued)
+
+Terminal states: COMPLETED, REJECTED, TIMED_OUT, FAILED.  Transitions are
+timestamped into ``Request.history`` so ``ServeReport`` can account for
+every request's fate — the engine's drain invariant is that a finished run
+leaves NO request non-terminal.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costs.engine import CostEngine, Decision, resolve_engine
+
+def _quantize_us(slack_s: Optional[float]) -> Optional[int]:
+    """Quantize a deadline slack (seconds) to two significant figures of
+    microseconds.  serve_admit CostQueries embed the slack; without
+    quantization every query is unique and the decision cache grows without
+    bound as a long-running server counts budgets down.  Negative slack
+    (already past deadline) pins to -1: one cache entry for 'hopeless'."""
+    if slack_s is None:
+        return None
+    us = slack_s * 1e6
+    if us <= 0:
+        return -1
+    exp = max(int(np.floor(np.log10(us))) - 1, 0)
+    step = 10 ** exp
+    return int(us // step) * step
+
 
 PREFILL_CHUNK_CANDIDATES = (1, 8, 16, 32, 64, 128, 256)
 # decode macro-step horizons: a FIXED candidate set (filtered, never clamped
@@ -26,20 +59,103 @@ PREFILL_CHUNK_CANDIDATES = (1, 8, 16, 32, 64, 128, 256)
 MACRO_STEP_CANDIDATES = (1, 2, 4, 8, 16, 32)
 
 
+class RequestState(str, enum.Enum):
+    """The request lifecycle state machine (module docstring diagram)."""
+
+    QUEUED = "QUEUED"
+    PREFILLING = "PREFILLING"
+    DECODING = "DECODING"
+    COMPLETED = "COMPLETED"
+    REJECTED = "REJECTED"
+    TIMED_OUT = "TIMED_OUT"
+    PREEMPTED = "PREEMPTED"
+    FAILED = "FAILED"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.COMPLETED, RequestState.REJECTED,
+                        RequestState.TIMED_OUT, RequestState.FAILED)
+
+
+class InvalidRequestError(ValueError):
+    """A malformed request, rejected at submission time (never mid-trace):
+    empty prompt, non-positive token budget, or prompt + budget overflowing
+    the slot capacity.  Subclasses ValueError so pre-lifecycle callers that
+    caught the old untyped error keep working."""
+
+
+def validate_request(req: "Request", max_len: int) -> None:
+    """Fail-fast submission-time validation; raises InvalidRequestError
+    naming the request id."""
+    plen = req.prompt_len
+    if plen <= 0:
+        raise InvalidRequestError(f"request {req.rid!r}: empty prompt")
+    if req.max_new_tokens <= 0:
+        raise InvalidRequestError(
+            f"request {req.rid!r}: max_new_tokens must be >= 1, got "
+            f"{req.max_new_tokens}")
+    need = plen + req.max_new_tokens
+    if need > max_len:
+        raise InvalidRequestError(
+            f"request {req.rid!r}: prompt_len {plen} + max_new_tokens "
+            f"{req.max_new_tokens} = {need} exceeds max_len {max_len}; "
+            f"raise max_len (it must cover prompt + generated tokens) or "
+            f"shorten the request")
+    for name in ("deadline_s", "ttft_deadline_s"):
+        v = getattr(req, name)
+        if v is not None and v <= 0:
+            raise InvalidRequestError(
+                f"request {req.rid!r}: {name} must be positive, got {v}")
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request.  ``arrival_s`` is relative to trace start;
-    result fields are filled in by the engine."""
+    lifecycle/result fields are filled in by the engine.
+
+    ``deadline_s`` / ``ttft_deadline_s`` are per-request latency budgets
+    measured from arrival (None = no deadline).  ``priority``: larger wins;
+    a waiting request with strictly higher priority preempts the
+    lowest-priority active slot when the pool is full."""
 
     rid: str
     prompt: np.ndarray  # (P,) int32
     max_new_tokens: int
     arrival_s: float = 0.0
+    priority: int = 0
+    deadline_s: Optional[float] = None  # total-latency budget from arrival
+    ttft_deadline_s: Optional[float] = None  # first-token budget from arrival
     # --- filled by the engine ---
     tokens: List[int] = dataclasses.field(default_factory=list)
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
+    state: RequestState = RequestState.QUEUED
+    reason: Optional[str] = None  # detail for REJECTED/TIMED_OUT/FAILED
+    preemptions: int = 0
+    retries: int = 0  # guarded device-step retries that touched this request
+    history: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+    def mark(self, state: RequestState, t: float,
+             reason: Optional[str] = None) -> None:
+        """One timestamped state-machine transition (terminal states also
+        stamp ``finish_s``, except REJECTED — never served, no latency)."""
+        self.state = state
+        self.history.append((state.value, t))
+        if reason is not None:
+            self.reason = reason
+        if state.terminal and state != RequestState.REJECTED:
+            self.finish_s = t
+
+    def reset_lifecycle(self) -> None:
+        """Fresh run: clear everything the engine fills in."""
+        self.tokens = []
+        self.admitted_s = self.first_token_s = self.finish_s = None
+        self.state = RequestState.QUEUED
+        self.reason = None
+        self.preemptions = 0
+        self.retries = 0
+        self.history = []
 
     @property
     def prompt_len(self) -> int:
@@ -180,6 +296,34 @@ class ServeScheduler:
             kv_bytes_per_slot=self.kv_bytes_per_slot,
             dtype_bytes=self.dtype_bytes, record=record)
         return int(dec.value), dec
+
+    def serve_admit(self, req: Request, *, now: float, active: int,
+                    n_slots: int) -> Tuple[bool, Decision]:
+        """Admission control for a deadlined request about to take a free
+        slot — the ninth decision site (CostQuery kind=serve_admit).
+
+        Queue delay already spent (``now - arrival``) has eaten into the
+        request's budgets; the sweep compares the analytic residual service
+        time (one prefill + the remaining decode steps at the post-admit
+        occupancy) against the remaining TTFT / total-latency slack and
+        SHEDS the request (typed REJECTED) when it cannot finish in time —
+        wasted prefill+decode work under overload is exactly the overhead
+        the paper says must be managed before it executes.  Slacks are
+        quantized to two significant figures so the decision cache stays
+        bounded as a long-running server counts budgets down."""
+        slack = None if req.deadline_s is None else \
+            req.deadline_s - (now - req.arrival_s)
+        ttft_slack = None if req.ttft_deadline_s is None else \
+            req.ttft_deadline_s - (now - req.arrival_s)
+        dec = self.engine.decide_serve_admit(
+            active, n_slots=n_slots, prompt_len=req.prompt_len,
+            new_tokens=req.max_new_tokens,
+            slack_us=_quantize_us(slack), ttft_slack_us=_quantize_us(ttft_slack),
+            flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes,
+            kv_bytes_per_slot=self.kv_bytes_per_slot,
+            dtype_bytes=self.dtype_bytes)
+        return bool(dec.value), dec
 
     def serve_shard(self, batch: int, *, tp: int,
                     override: Optional[str] = None) -> Tuple[int, Decision]:

@@ -48,6 +48,7 @@ class SlotPool:
         self.n_slots = n_slots
         self.max_len = max_len
         self.state = model.init_decode_state(n_slots, max_len, per_slot=True)
+        self._shardings = shardings
         # donate the pooled state: slot surgery updates buffers in place
         if shardings is not None:
             self.state = jax.device_put(self.state, shardings)
@@ -120,6 +121,27 @@ class SlotPool:
         self._active[slot] = False
         self._host_pos[slot] = 0
         self._free.append(slot)
+
+    def drain(self) -> None:
+        """Failure-path reset: release every slot and restore a valid,
+        donation-ready pooled state no matter what the aborted step left
+        behind.  The happy path is the jitted reset-all program over the
+        existing buffers; if an abandoned step consumed them (donation
+        means a stale reference RAISES, by design), fall back to a fresh
+        ``init_decode_state`` so the engine is reusable either way."""
+        try:
+            mask = np.ones((self.n_slots,), bool)
+            self.state = self._reset(self.state, jnp.asarray(mask))
+            self.dispatch_count += 1
+        except RuntimeError:
+            self.state = self.model.init_decode_state(
+                self.n_slots, self.max_len, per_slot=True)
+            if self._shardings is not None:
+                self.state = jax.device_put(self.state, self._shardings)
+        self._free = list(range(self.n_slots))
+        self._owner = [None] * self.n_slots
+        self._active[:] = False
+        self._host_pos[:] = 0
 
     # ------------------------------------------------------------------
     # Host position mirror (the engine advances it as tokens land)

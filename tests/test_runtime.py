@@ -46,6 +46,8 @@ DOCUMENTED_API = [
     "TrainLoopConfig",
     "AdamWConfig",
     "Request",
+    "RequestState",
+    "InvalidRequestError",
     "ServeReport",
     "CostEngine",
     "CostQuery",

@@ -1,0 +1,400 @@
+"""Overload-robust serving: request lifecycle, deadlines, preemption,
+fault injection, drain invariants.
+
+* typed fail-fast validation (InvalidRequestError names the rid)
+* the unperturbed path is untouched: lifecycle states recorded, but zero
+  serve_admit queries, no preemption, no threads
+* bounded queue backpressure (queue_full), queued + decoding deadline
+  expiry, admission-time load shedding (deadline_infeasible, ledger row)
+* priority preemption: evict -> re-queue -> re-prefill, token-identical
+* fault classes: transient raise/stall retry to a token-identical finish,
+  nan poisons exactly the corrupted request, exhausted retries and fatal
+  aborts FAIL in flight but leave the engine (slots + donated buffers)
+  reusable and token-identical on the next run
+* CostEngine.drift_report flags mis-calibrated sites in ledger.report()
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costs.engine import CostEngine
+from repro.core.costs.ledger import OverheadLedger
+from repro.core.costs.model import CostBreakdown
+from repro.models import build_model
+from repro.runtime import Runtime, set_default_runtime
+from repro.serving import (
+    ContinuousServeEngine,
+    FatalFault,
+    FaultInjector,
+    FaultSpec,
+    InvalidRequestError,
+    Request,
+    RequestState,
+)
+
+PROMPT_LEN = 7
+MAX_NEW = 9
+MAX_LEN = PROMPT_LEN + MAX_NEW
+
+
+@pytest.fixture(autouse=True)
+def _fresh_runtime():
+    set_default_runtime(Runtime())
+    yield
+    set_default_runtime(None)
+
+
+def _build(arch="tinyllama-1.1b", key=0):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(key))
+    return cfg, model, params
+
+
+def _prompts(cfg, b, p=PROMPT_LEN, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, (b, p)).astype(np.int32)
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("eos_id", 0)
+    return ContinuousServeEngine(model, params, **kw)
+
+
+def _tick_clock(dt=1e-3):
+    """Deterministic advancing clock: every now() call moves time forward,
+    so deadline/preemption tests are machine-speed independent."""
+    t = [0.0]
+
+    def now():
+        t[0] += dt
+        return t[0]
+
+    return now
+
+
+def _solo_tokens(model, params, req_prompt, max_new, **kw):
+    """Reference: the request run alone on a fresh engine."""
+    fresh = _engine(model, params, n_slots=1, **kw)
+    rep = fresh.run([Request("solo", req_prompt, max_new)],
+                    now_fn=lambda: 0.0)
+    return list(rep.requests[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast validation
+# ---------------------------------------------------------------------------
+
+
+def test_invalid_requests_raise_typed_error_naming_rid():
+    cfg, model, params = _build()
+    ok = _prompts(cfg, 1)[0]
+    bad = [
+        Request("empty", np.zeros((0,), np.int32), MAX_NEW),
+        Request("nonew", ok, 0),
+        Request("toolong", ok, MAX_LEN),  # prompt + max_new > max_len
+        Request("baddl", ok, MAX_NEW, deadline_s=-1.0),
+        Request("badttft", ok, MAX_NEW, ttft_deadline_s=0.0),
+    ]
+    engine = _engine(model, params)
+    for r in bad:
+        with pytest.raises(InvalidRequestError, match=r.rid):
+            engine.run([r], now_fn=lambda: 0.0)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine.run([Request("toolong", ok, MAX_LEN)], now_fn=lambda: 0.0)
+    # a bad request poisons nothing: the engine still serves a clean trace
+    rep = engine.run([Request("r0", ok, MAX_NEW)], now_fn=lambda: 0.0)
+    assert rep.requests[0].state == RequestState.COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle on the unperturbed path
+# ---------------------------------------------------------------------------
+
+
+def test_unperturbed_run_records_lifecycle_without_extra_machinery():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 3)
+    rt = Runtime()
+    set_default_runtime(rt)
+    engine = _engine(model, params)
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(3)], now_fn=lambda: 0.0)
+    assert rep.all_terminal
+    assert rep.state_counts() == {"COMPLETED": 3}
+    for r in rep.requests:
+        seen = [s for s, _ in r.history]
+        assert seen[0] == "PREFILLING" and seen[-1] == "COMPLETED"
+        assert "DECODING" in seen
+    d = rep.as_dict()
+    assert d["all_terminal"] and d["states"] == {"COMPLETED": 3}
+    assert d["step_retries"] == 0 and d["watchdog_fires"] == 0
+    # no deadlines anywhere => the admit cost site is never even queried
+    assert not [e for e in rt.ledger.entries if e.site == "serve_admit"]
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_sheds_overflow_with_typed_reason():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 4)
+    engine = _engine(model, params, n_slots=1, queue_limit=1)
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(4)], now_fn=lambda: 0.0)
+    assert rep.all_terminal
+    counts = rep.state_counts()
+    assert counts["REJECTED"] == 3 and counts["COMPLETED"] == 1
+    for r in rep.requests:
+        if r.state == RequestState.REJECTED:
+            assert r.reason == "queue_full"
+            assert not r.tokens
+
+
+def test_deadline_expires_while_queued():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2)
+    engine = _engine(model, params, n_slots=1)
+    # r0 hogs the only slot; r1's tiny deadline lapses in the queue (the
+    # tick clock advances on every now() call, so this never races)
+    reqs = [Request("hog", prompts[0], MAX_NEW),
+            Request("late", prompts[1], MAX_NEW, deadline_s=1e-3)]
+    rep = engine.run(reqs, now_fn=_tick_clock())
+    assert rep.all_terminal
+    late = rep.requests[1]
+    assert late.state == RequestState.TIMED_OUT
+    assert "queued" in late.reason
+    assert rep.requests[0].state == RequestState.COMPLETED
+
+
+def test_deadline_enforced_at_macro_step_boundary_while_decoding():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 1)
+    # eos_id=-1: EOS can never fire, so the deadline is what ends the run
+    engine = _engine(model, params, n_slots=1, macro_step=1, eos_id=-1)
+    # generous enough to pass the analytic admit check, short enough that
+    # the tick clock overruns it after a few decode steps
+    req = Request("r0", prompts[0], MAX_NEW, deadline_s=0.05)
+    rep = engine.run([req], now_fn=_tick_clock(dt=5e-3))
+    assert rep.all_terminal
+    assert req.state == RequestState.TIMED_OUT
+    assert "decoding" in req.reason
+    assert 0 < len(req.tokens) < MAX_NEW  # evicted mid-stream, slot freed
+    assert engine.pool.free_count == 1
+
+
+def test_admission_sheds_infeasible_deadline_as_costed_decision():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2)
+    rt = Runtime()
+    set_default_runtime(rt)
+    engine = _engine(model, params)
+    reqs = [Request("ok", prompts[0], MAX_NEW),
+            Request("doomed", prompts[1], MAX_NEW, deadline_s=1e-12)]
+    rep = engine.run(reqs, now_fn=lambda: 0.0)
+    assert rep.all_terminal
+    assert reqs[0].state == RequestState.COMPLETED
+    assert reqs[1].state == RequestState.REJECTED
+    assert reqs[1].reason == "deadline_infeasible"
+    rows = [e for e in rt.ledger.entries if e.site == "serve_admit"]
+    assert rows and any(e.choice == "shed" for e in rows)
+    assert all(e.predicted_s >= 0 for e in rows)
+
+
+# ---------------------------------------------------------------------------
+# Priority preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preempted_request_resumes_token_identical():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2, seed=5)
+    # eos_id=-1: both requests run their full budget, so "low" is still
+    # mid-decode when "high" arrives and preemption must fire
+    engine = _engine(model, params, n_slots=1, macro_step=1, eos_id=-1)
+    low = Request("low", prompts[0], MAX_NEW, priority=0)
+    high = Request("high", prompts[1], MAX_NEW, arrival_s=0.01, priority=5)
+    rep = engine.run([low, high], now_fn=_tick_clock())
+    assert rep.all_terminal
+    assert rep.state_counts() == {"COMPLETED": 2}
+    assert low.preemptions >= 1 and rep.preemptions >= 1
+    seen = [s for s, _ in low.history]
+    assert "PREEMPTED" in seen
+    assert seen.index("PREEMPTED") < len(seen) - 1  # re-queued after
+    # greedy resume (re-prefill prompt + generated-so-far) is exact
+    assert list(low.tokens) == _solo_tokens(
+        model, params, prompts[0], MAX_NEW, eos_id=-1)
+    assert list(high.tokens) == _solo_tokens(
+        model, params, prompts[1], MAX_NEW, eos_id=-1)
+    # original queue-time stamp survives the round trip
+    assert low.admitted_s is not None and low.first_token_s is not None
+
+
+# ---------------------------------------------------------------------------
+# Fault classes
+# ---------------------------------------------------------------------------
+
+
+def _clean_tokens(model, params, prompts, **kw):
+    engine = _engine(model, params, **kw)
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(len(prompts))], now_fn=lambda: 0.0)
+    return {r.rid: list(r.tokens) for r in rep.requests}
+
+
+def test_transient_raise_retries_to_token_identical_finish():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2)
+    clean = _clean_tokens(model, params, prompts, macro_step=1)
+    engine = _engine(
+        model, params, macro_step=1,
+        injector=FaultInjector((FaultSpec("raise", site="macro", after=1),)))
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(2)], now_fn=lambda: 0.0)
+    assert rep.state_counts() == {"COMPLETED": 2}
+    assert rep.step_retries >= 1
+    assert any(r.retries >= 1 for r in rep.requests)
+    for r in rep.requests:
+        assert list(r.tokens) == clean[r.rid]
+
+
+def test_exhausted_retries_fail_inflight_and_engine_recovers():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2)
+    clean = _clean_tokens(model, params, prompts, macro_step=1)
+    engine = _engine(
+        model, params, macro_step=1, max_retries=1,
+        injector=FaultInjector((FaultSpec("raise", site="macro",
+                                          after=0, count=100),)))
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(2)], now_fn=lambda: 0.0)
+    assert rep.all_terminal
+    for r in rep.requests:
+        assert r.state == RequestState.FAILED
+        assert "macro step failed" in r.reason
+    # the poison spec is gone => slot pool + donated buffers must be back
+    # to a clean, reusable state, bit-for-bit
+    assert engine.pool.free_count == engine.pool.n_slots
+    engine.injector = None
+    rep2 = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                       for i in range(2)], now_fn=lambda: 0.0)
+    assert rep2.state_counts() == {"COMPLETED": 2}
+    for r in rep2.requests:
+        assert list(r.tokens) == clean[r.rid]
+
+
+def test_nan_fault_fails_only_the_poisoned_request():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2)
+    clean = _clean_tokens(model, params, prompts, macro_step=1)
+    engine = _engine(
+        model, params, macro_step=1,
+        injector=FaultInjector((FaultSpec("nan", site="macro", after=0),)))
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(2)], now_fn=lambda: 0.0)
+    assert rep.all_terminal
+    counts = rep.state_counts()
+    assert counts == {"COMPLETED": 1, "FAILED": 1}
+    failed = next(r for r in rep.requests if r.state == RequestState.FAILED)
+    assert "corrupt" in failed.reason
+    survivor = next(r for r in rep.requests
+                    if r.state == RequestState.COMPLETED)
+    assert list(survivor.tokens) == clean[survivor.rid]
+
+
+def test_stalled_step_is_watchdogged_cancelled_and_retried():
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 1)
+    engine = _engine(model, params, macro_step=1)
+    # warm first, arm after (as Runtime.serve does): the first-call jit
+    # compile takes seconds and must not trip a sub-second watchdog
+    clean = engine.run([Request("r0", prompts[0], MAX_NEW)],
+                       now_fn=lambda: 0.0)
+    engine.watchdog_s = 0.5
+    engine.injector = FaultInjector((FaultSpec("stall", site="macro",
+                                               after=1, stall_s=30.0),))
+    rep = engine.run([Request("r0", prompts[0], MAX_NEW)],
+                     now_fn=lambda: 0.0)
+    assert rep.state_counts() == {"COMPLETED": 1}
+    assert rep.watchdog_fires >= 1 and rep.step_retries >= 1
+    assert list(rep.requests[0].tokens) == list(clean.requests[0].tokens)
+
+
+def test_fatal_abort_leaves_slots_released_and_state_valid():
+    """ISSUE satellite: a run aborted by an injected fault leaves the
+    SlotPool fully released and the donated decode state valid — the next
+    run() on the same engine is token-identical to a fresh engine."""
+    cfg, model, params = _build()
+    prompts = _prompts(cfg, 2, seed=11)
+    clean = _clean_tokens(model, params, prompts, macro_step=1)
+    engine = _engine(
+        model, params, macro_step=1,
+        injector=FaultInjector((FaultSpec("raise", site="macro",
+                                          after=0, fatal=True),)))
+    reqs = [Request(f"r{i}", prompts[i], MAX_NEW) for i in range(2)]
+    with pytest.raises(FatalFault):
+        engine.run(reqs, now_fn=lambda: 0.0)
+    # abort safety net: everything terminal, nothing leaked
+    assert all(r.state.terminal for r in reqs)
+    assert all(r.state == RequestState.FAILED for r in reqs
+               if r.tokens)  # in-flight ones failed with their partial text
+    assert engine.pool.free_count == engine.pool.n_slots
+    engine.injector = None
+    rep = engine.run([Request(f"r{i}", prompts[i], MAX_NEW)
+                      for i in range(2)], now_fn=lambda: 0.0)
+    assert rep.state_counts() == {"COMPLETED": 2}
+    for r in rep.requests:
+        assert list(r.tokens) == clean[r.rid]
+
+
+# ---------------------------------------------------------------------------
+# Calibration drift surfacing
+# ---------------------------------------------------------------------------
+
+
+def _breakdown(total):
+    return CostBreakdown(strategy="x", compute=total, memory=0.0,
+                         collective=0.0, fixed=0.0)
+
+
+def test_drift_report_flags_only_drifting_sites():
+    ledger = OverheadLedger()
+    for _ in range(10):  # healthy site: measured ~= predicted
+        e = ledger.record("matmul", {"op": "t"}, "parallel", _breakdown(1e-3))
+        e.measured_s = 1.1e-3
+    for _ in range(10):  # drifted site: 5x slower than predicted
+        e = ledger.record("serve", {"op": "t"}, "admit", _breakdown(1e-3))
+        e.measured_s = 5e-3
+    drift = ledger.drift(window=20, threshold=3.0)
+    assert not drift["matmul"]["drifting"]
+    assert drift["serve"]["drifting"]
+    assert drift["serve"]["geomean_ratio"] == pytest.approx(5.0)
+    report = ledger.report()
+    assert "calibration drift" in report and "serve" in report
+    assert "matmul: measured/predicted" not in report
+
+
+def test_drift_window_ages_out_warmup_rows():
+    ledger = OverheadLedger()
+    for _ in range(5):  # compile-inflated warmup rows, 100x over
+        e = ledger.record("serve", {}, "c", _breakdown(1e-3))
+        e.measured_s = 0.1
+    for _ in range(20):  # healthy steady state fills the trailing window
+        e = ledger.record("serve", {}, "c", _breakdown(1e-3))
+        e.measured_s = 1e-3
+    assert not ledger.drift(window=20)["serve"]["drifting"]
+
+
+def test_cost_engine_drift_report_delegates_to_its_ledger():
+    engine = CostEngine()
+    for _ in range(3):
+        e = engine.ledger.record("sort", {}, "serial", _breakdown(1e-4))
+        e.measured_s = 1e-2  # 100x over
+    drift = engine.drift_report(window=10, threshold=3.0)
+    assert drift["sort"]["drifting"]
