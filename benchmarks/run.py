@@ -13,8 +13,9 @@
                      + autotune prior-vs-measured-optimum deltas
   serving_bench    — static-batch vs continuous-batching serving under a
                      staggered arrival trace (tok/s + p50/p95 latency,
-                     token-equivalence anchor, site=serve ledger rows);
-                     writes the machine-readable BENCH_serving.json
+                     token-equivalence anchor, site=serve ledger rows),
+                     plus sharded / paged-KV / shared-prefix full-load
+                     rows; writes the machine-readable BENCH_serving.json
   stress_bench     — overload (2x Poisson) + fault-injection drills
                      (raise | nan | stall) against the request lifecycle:
                      every request terminal, transient faults retry to a
@@ -92,7 +93,28 @@ def run_suites(runtime, only=None):
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    _print_drift(runtime)
     return failed
+
+
+def _print_drift(runtime) -> None:
+    """Calibration-drift summary over everything the suites just measured:
+    per-site geometric-mean measured/predicted ratio from the CostEngine
+    ledger, with drifting sites (ratio outside [1/3, 3]) called out — the
+    signal that the calibrated HardwareSpec no longer matches the backend."""
+    try:
+        drift = runtime.engine.drift_report()
+    except Exception:
+        traceback.print_exc()
+        return
+    if not drift:
+        return
+    print("### calibration drift (measured/predicted, trailing window)")
+    for site, row in sorted(drift.items()):
+        flag = "  DRIFTING" if row.get("drifting") else ""
+        ratio = row.get("geomean_ratio", float("nan"))
+        print(f"drift,site={site},geomean_ratio={ratio:.3g},"
+              f"rows={row.get('n', 0)}{flag}")
 
 
 def main() -> None:

@@ -126,6 +126,21 @@ def _measure_host_sync(reps: int = 50) -> float:
     return _timeit(lambda: np.asarray(y), reps)
 
 
+def _measure_prefix_lookup(reps: int = 20000, block_size: int = 16) -> float:
+    """Host wall time of ONE radix-trie hop — building a block's token
+    tuple and probing a children dict with it, the per-block unit the
+    serve_prefix site charges for the admission lookup/pin walk.  Pure
+    host Python: no device involved."""
+    tokens = list(range(block_size * 64))
+    children = {tuple(tokens[i * block_size:(i + 1) * block_size]): i
+                for i in range(64)}
+    t0 = time.perf_counter()
+    for r in range(reps):
+        i = (r % 64) * block_size
+        children.get(tuple(tokens[i:i + block_size]))
+    return (time.perf_counter() - t0) / reps
+
+
 def _measure_collective_base(reps: int = 20) -> Optional[float]:
     """Base latency of a tiny all-reduce; None on single-device backends."""
     import jax
@@ -205,6 +220,7 @@ def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
 
     attempt("kernel_launch_s", _measure_launch_latency)
     attempt("host_sync_s", _measure_host_sync)
+    attempt("prefix_lookup_s", _measure_prefix_lookup)
     attempt("hbm_bw", _measure_memory_bw)
     attempt("peak_flops_f32",
             lambda: _measure_matmul_flops(matmul_order, dtype="float32"))

@@ -46,7 +46,7 @@ class CostQuery:
     """Hashable description of one fork-join decision problem.
 
     ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard |
-    serve | serve_macro | serve_shard | serve_admit.
+    serve | serve_macro | serve_shard | serve_admit | serve_prefix.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -437,6 +437,41 @@ class CostEngine:
         return Decision(q, choice, best, baseline=baseline,
                         alternatives=tuple(cands), value=value)
 
+    def _solve_serve_prefix(self, q: CostQuery) -> Decision:
+        """Prefix-cache reuse vs full prefill at admission — the tenth
+        decision site (site=serve_prefix ledger rows).
+
+        shape=(prompt_len,); params: hit_tokens (radix-trie match length),
+        cow_blocks (partial-tail blocks duplicated copy-on-write), chunk
+        (the group's prefill chunk), block_size, flops_per_token,
+        weight_bytes, kv_bytes_per_token.  Reuse pays suffix-only prefill
+        plus the host trie walk (``hw.prefix_lookup_s`` per block) and the
+        CoW page copy; baseline = full prefill of the whole prompt.  The
+        engine attaches the admitted group's measured prefill wall time."""
+        (prompt_len,) = q.shape
+        hit = int(q.param("hit_tokens", 0))
+        kw = dict(
+            chunk=int(q.param("chunk", prompt_len)),
+            flops_per_token=float(q.param("flops_per_token", 0.0)),
+            weight_bytes=float(q.param("weight_bytes", 0.0)),
+            block_size=int(q.param("block_size", 1)),
+            kv_bytes_per_token=float(q.param("kv_bytes_per_token", 0.0)),
+            dtype_bytes=q.dtype_bytes)
+        baseline = self.model.serve_prefix_cost(prompt_len, 0, **kw)
+        reuse = self.model.serve_prefix_cost(
+            prompt_len, hit, cow_blocks=int(q.param("cow_blocks", 0)), **kw)
+        override = q.param("override", None)
+        if override == "use_prefix":
+            use = hit > 0
+        elif override == "full_prefill":
+            use = False
+        else:
+            use = hit > 0 and reuse.total <= baseline.total
+        best = reuse if use else baseline
+        return Decision(q, "use_prefix" if use else "full_prefill", best,
+                        baseline=baseline, alternatives=(reuse, baseline),
+                        value=hit if use else 0)
+
     # ------------------------------------------------------------------
     # Convenience wrappers (the decision sites)
     # ------------------------------------------------------------------
@@ -564,6 +599,26 @@ class CostEngine:
             weight_bytes=int(weight_bytes),
             kv_bytes_per_slot=int(kv_bytes_per_slot),
             n_layers=int(n_layers), d_model=int(d_model)), record=record)
+
+    def decide_serve_prefix(self, prompt_len: int, *, hit_tokens: int,
+                            cow_blocks: int, chunk: int, block_size: int,
+                            flops_per_token: float, weight_bytes: float,
+                            kv_bytes_per_token: float = 0,
+                            dtype_bytes: int = 2,
+                            override: Optional[str] = None) -> Decision:
+        """Use the radix prefix cache (suffix-only prefill) vs full prefill
+        for one admitted prompt.  ``value`` is the hit length actually
+        applied (0 for full_prefill).  ``override`` pins the verdict
+        ('use_prefix' / 'full_prefill') — the sweep is still priced and
+        ledgered, same idiom as the serve_shard override."""
+        return self.query(CostQuery.make(
+            "serve_prefix", (prompt_len,), dtype_bytes=dtype_bytes,
+            hit_tokens=int(hit_tokens), cow_blocks=int(cow_blocks),
+            chunk=int(chunk), block_size=int(block_size),
+            flops_per_token=int(flops_per_token),
+            weight_bytes=int(weight_bytes),
+            kv_bytes_per_token=int(kv_bytes_per_token),
+            override=override))
 
     # ------------------------------------------------------------------
     # Crossover solvers (delegate to the analytic model on this hw)

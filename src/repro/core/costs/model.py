@@ -407,6 +407,36 @@ class OverheadModel:
         per_chunk = max(compute, memory) + self.hw.kernel_launch_s
         return n_chunks * per_chunk, per_chunk
 
+    def serve_prefix_cost(self, prompt_len: int, hit_tokens: int, chunk: int,
+                          *, flops_per_token: float, weight_bytes: float,
+                          block_size: int, cow_blocks: int = 0,
+                          kv_bytes_per_token: float = 0.0,
+                          dtype_bytes: int = 2) -> CostBreakdown:
+        """Admission with ``hit_tokens`` of the prompt served from the
+        radix prefix cache: prefill only the suffix, plus the host-side
+        trie lookup/pin walk and any copy-on-write block duplication.
+
+        The serve_prefix site compares this against the full-prefill
+        baseline (``hit_tokens=0``): reuse wins whenever the skipped
+        prefill compute exceeds the lookup + CoW overhead — the paper's
+        redundant-work class, priced explicitly."""
+        suffix = max(prompt_len - hit_tokens, 1)
+        total, _ = self.serve_prefill_cost(
+            suffix, chunk, flops_per_token=flops_per_token,
+            weight_bytes=weight_bytes, dtype_bytes=dtype_bytes)
+        # CoW: duplicate `cow_blocks` pages (read + write one block of KV)
+        cow_bytes = 2 * cow_blocks * block_size * kv_bytes_per_token
+        cow_s = cow_bytes / (self.hw.hbm_bw * self.mem_eff)
+        if cow_blocks:
+            cow_s += self.hw.kernel_launch_s  # one jitted copy dispatch
+        lookup_s = (hit_tokens / max(block_size, 1) + 1) * \
+            self.hw.prefix_lookup_s
+        # suffix prefill, CoW copy, and the host trie walk are sequential:
+        # compute holds the prefill, fixed the serialized overheads, so
+        # CostBreakdown.total = prefill + cow + lookup
+        return CostBreakdown(
+            f"prefix_h{hit_tokens}", total, 0.0, 0.0, cow_s + lookup_s)
+
     # ------------------------------------------------------------------
     # MoE dispatch strategy (EP overhead management)
     # ------------------------------------------------------------------

@@ -314,6 +314,14 @@ def serve_state_sharding(state_shape: Any, mesh: Mesh, *,
                 dims[lead + 2] = model_axis
             elif s % tp == 0 and s >= 2 * tp:
                 dims[lead + 1] = model_axis
+        if tp > 1 and keys and keys[-1] in ("pk", "pv") and arr.ndim == lead + 4:
+            # paged page pools (L?, n_blocks, block_size, H, hd): shard the
+            # kv-head dim like dense caches; never the block axis — block
+            # ids index it from dynamically-gathered tables, and a shard
+            # split there would turn every gather into a collective
+            h = arr.shape[lead + 2]
+            if h % tp == 0:
+                dims[lead + 2] = model_axis
         return NamedSharding(mesh, P(*dims))
 
     return jax.tree_util.tree_map_with_path(rule, state_shape)

@@ -36,6 +36,7 @@ class HardwareSpec:
     kernel_launch_s: float = 2e-6  # per dispatched program
     collective_base_s: float = 1e-5  # per collective setup/sync latency
     host_sync_s: float = 5e-6  # per device->host round trip (fetch + bookkeeping)
+    prefix_lookup_s: float = 1e-7  # per-block radix-trie lookup/pin (host side)
     # MXU tiling
     mxu_dim: int = 128  # systolic array native tile
     lane_dim: int = 128  # VPU lane count

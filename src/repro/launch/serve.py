@@ -10,6 +10,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
       --requests 8 --prompt-len 8 --max-new 16 --slots 4 \
       --arrival staggered --gap-ms 20 --engine both
+
+  # paged KV + shared-prefix traffic (system-prompt shape): every request
+  # opens with the same 6 tokens, prefilled once and reused from the trie
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --requests 8 --prompt-len 8 --max-new 8 --slots 1 --arrival all \
+      --engine continuous --paged --block-size 4 --prefix-cache force \
+      --prefix-share 1.0 --prefix-len 6
 """
 
 from __future__ import annotations
@@ -75,6 +82,25 @@ def main(argv=None):
     ap.add_argument("--watchdog-ms", type=float, default=None,
                     help="abort any single device step exceeding this "
                          "(bounded retries, then in-flight requests FAIL)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: store full-attention caches in a shared "
+                         "BlockPool of fixed-size pages with per-slot block "
+                         "tables (continuous engine only)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV page size in tokens")
+    ap.add_argument("--prefix-cache", choices=("auto", "force", "off"),
+                    default="auto",
+                    help="radix prefix reuse at admission: 'auto' asks the "
+                         "CostEngine per prompt (the serve_prefix decision "
+                         "site), 'force' pins reuse on, 'off' disables the "
+                         "trie")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of trace requests that open with one "
+                         "shared random prefix (system-prompt traffic; "
+                         "needs --prefix-len)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="length of the shared prefix in tokens "
+                         "(0 < prefix_len < prompt_len)")
     args = ap.parse_args(argv)
 
     # fail-fast flag validation (mirrors Runtime.serve, but at the CLI
@@ -94,6 +120,17 @@ def main(argv=None):
     if args.inject_fault == "stall" and args.watchdog_ms is None:
         ap.error("--inject-fault stall without --watchdog-ms would hang "
                  "the trace; pass --watchdog-ms")
+    if args.paged and args.engine == "static":
+        ap.error("--paged needs the slot pool of --engine continuous")
+    if args.paged and args.block_size < 1:
+        ap.error(f"--block-size must be >= 1, got {args.block_size}")
+    if args.prefix_share:
+        if not 0.0 < args.prefix_share <= 1.0:
+            ap.error(f"--prefix-share must be in (0, 1], "
+                     f"got {args.prefix_share}")
+        if not 0 < args.prefix_len < args.prompt_len:
+            ap.error(f"--prefix-len must be in (0, prompt_len="
+                     f"{args.prompt_len}), got {args.prefix_len}")
 
     mesh_shape = None
     if args.mesh is not None:
@@ -123,8 +160,11 @@ def main(argv=None):
         return synthetic_trace(
             args.requests, prompt_len=args.prompt_len, max_new=args.max_new,
             vocab_size=cfg.vocab_size, arrival=args.arrival,
-            gap_ms=args.gap_ms, rate=args.rate, seed=args.seed)
+            gap_ms=args.gap_ms, rate=args.rate, seed=args.seed,
+            prefix_share=args.prefix_share, prefix_len=args.prefix_len)
 
+    prefix_cache = {"auto": "auto", "force": "force",
+                    "off": False}[args.prefix_cache]
     modes = {"static": ("static",), "continuous": ("continuous",),
              "both": ("static", "continuous")}[args.engine]
     results = [
@@ -134,7 +174,9 @@ def main(argv=None):
                  mesh_shape=mesh_shape if mode == "continuous" else None,
                  shard_params=args.serve_shard,
                  queue_limit=args.queue_limit, deadline_ms=args.deadline_ms,
-                 inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms)
+                 inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms,
+                 paged=args.paged and mode == "continuous",
+                 block_size=args.block_size, prefix_cache=prefix_cache)
         for mode in modes
     ]
 
@@ -149,6 +191,14 @@ def main(argv=None):
             print(f"    host syncs {res.report.host_syncs} "
                   f"({res.report.host_syncs_per_token:.3f}/token), "
                   f"device dispatches {res.report.device_dispatches}")
+            if args.paged:
+                print(f"    paged KV: peak live tokens "
+                      f"{res.report.live_tokens}, reserved blocks "
+                      f"{res.report.reserved_blocks}, prefix hits "
+                      f"{res.report.prefix_hit_tokens} tokens "
+                      f"(rate {res.report.prefix_hit_rate:.2f}), "
+                      f"prefilled {res.report.prefilled_tokens}, "
+                      f"CoW {res.report.cow_count}")
             if res.report.mesh_shape is not None:
                 print(f"    mesh {res.report.mesh_shape} "
                       f"({res.report.device_count} devices), "
@@ -171,7 +221,7 @@ def main(argv=None):
 
     serve_rows = [e for e in rt.ledger.entries
                   if e.site in ("serve", "serve_macro", "serve_shard",
-                                "serve_admit")]
+                                "serve_admit", "serve_prefix")]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")
@@ -179,7 +229,9 @@ def main(argv=None):
     for e in serve_rows[-12:]:
         op = e.query.get("op", {"serve_macro": "macro_horizon",
                                 "serve_shard": "serve_shard",
-                                "serve_admit": "serve_admit"}.get(e.site, "?"))
+                                "serve_admit": "serve_admit",
+                                "serve_prefix": "serve_prefix",
+                                }.get(e.site, "?"))
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
         print(f"    {op:14s} {e.choice:14s} "
               f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")

@@ -243,6 +243,60 @@ def update_kv_cache(k_cache, v_cache, k_new, v_new, pos):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: shared page pool + per-slot block tables
+# ---------------------------------------------------------------------------
+
+
+def paged_update_kv_cache(pk, pv, k_new, v_new, pos, block_tables,
+                          block_size: int):
+    """Scatter (B, S_new, Hkv, hd) new KV into the shared page pool.
+
+    ``pk``/``pv`` are (n_blocks, block_size, Hkv, hd) pools shared by all
+    slots; ``block_tables`` is (B, max_blocks) int32 mapping each slot's
+    logical block index to a physical page; ``pos`` is () or (B,) logical
+    write offsets.  Writes at logical positions past the table (or rows
+    whose table entry is unallocated) land in block 0 — the reserved
+    null/garbage page — so masked-off slots and clamped indices can never
+    corrupt live pages.  Token identity then rests on the attention length
+    limit: garbage is only ever at positions >= a slot's valid length,
+    where the mask zeroes it exactly (exp(NEG_INF) == 0.0 in f32)."""
+    b = k_new.shape[0]
+    sq = k_new.shape[1]
+    max_blocks = block_tables.shape[1]
+    pos = jnp.reshape(jnp.asarray(pos), (-1,))  # () or (B,) -> (1,) or (B,)
+    pos = jnp.broadcast_to(pos, (b,))
+    logical = pos[:, None] + jnp.arange(sq)[None, :]  # (B, S_new)
+    valid = logical < max_blocks * block_size
+    bidx = jnp.clip(logical // block_size, 0, max_blocks - 1)
+    table = jnp.take_along_axis(block_tables, bidx, axis=1)  # (B, S_new)
+    table = jnp.where(valid, table, 0)  # out-of-range -> null block
+    phys = table * block_size + logical % block_size  # (B, S_new) flat rows
+    flat = phys.reshape(-1)
+    nk = k_new.astype(pk.dtype).reshape((b * sq,) + k_new.shape[2:])
+    nv = v_new.astype(pv.dtype).reshape((b * sq,) + v_new.shape[2:])
+    shape = pk.shape
+    pk = pk.reshape((-1,) + shape[2:]).at[flat].set(nk).reshape(shape)
+    pv = pv.reshape((-1,) + shape[2:]).at[flat].set(nv).reshape(shape)
+    return pk, pv
+
+
+def paged_gather_kv(pk, pv, block_tables, block_size: int):
+    """Gather each slot's logical KV view from the page pool:
+    (n_blocks, bs, Hkv, hd) x (B, max_blocks) -> (B, max_blocks*bs, Hkv, hd).
+
+    The result feeds the existing ``decode_attention`` unchanged — its
+    length limit masks every position past the slot's fill level, so
+    whatever stale/null data the unwritten page tails hold contributes
+    exactly zero probability mass."""
+    b, max_blocks = block_tables.shape
+    kc = pk[block_tables]  # (B, max_blocks, bs, Hkv, hd)
+    vc = pv[block_tables]
+    kc = kc.reshape((b, max_blocks * block_size) + pk.shape[2:])
+    vc = vc.reshape((b, max_blocks * block_size) + pv.shape[2:])
+    return kc, vc
+
+
+# ---------------------------------------------------------------------------
 # Dispatcher
 # ---------------------------------------------------------------------------
 

@@ -181,12 +181,16 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
         total = ce + AUX_LOSS_WEIGHT * aux + Z_LOSS_WEIGHT * z
         return total, {"ce": ce, "aux": aux, "z": z}
 
-    def init_decode_state(batch_size: int, max_len: int, per_slot: bool = False):
+    def init_decode_state(batch_size: int, max_len: int, per_slot: bool = False,
+                          paging=None):
         """``per_slot=True`` gives every batch row its own cache position
-        (continuous batching); the default scalar keeps lockstep decode."""
+        (continuous batching); the default scalar keeps lockstep decode.
+        ``paging=(n_blocks, block_size)`` swaps full-attention KV for a
+        slot-shared page pool addressed by per-batch block tables (passed
+        per step as ``batch["block_tables"]``)."""
         pos_shape = (batch_size,) if per_slot else ()
         return {
-            "layers": tfm.stack_init_state(cfg, batch_size, max_len),
+            "layers": tfm.stack_init_state(cfg, batch_size, max_len, paging),
             "pos": jnp.zeros(pos_shape, jnp.int32),
         }
 
@@ -198,6 +202,7 @@ def _build_decoder_only(cfg: ModelConfig) -> Model:
         x, new_layers, _ = tfm.stack_apply(
             params["layers"], cfg, x, positions,
             states=state["layers"], cache_pos=pos, ctx=ctx, remat=False,
+            block_tables=batch.get("block_tables"),
         )
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = _logits(params, x)

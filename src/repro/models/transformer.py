@@ -77,6 +77,7 @@ def layer_init(key, cfg: ModelConfig, kind: str, dtype):
 def _attn_apply(
     params, cfg: ModelConfig, x, positions, *, window: int,
     cache=None, cache_pos=None, ctx=None, causal: bool = True,
+    block_tables=None,
 ):
     """Returns (out, new_cache)."""
     b, s, d = x.shape
@@ -101,10 +102,21 @@ def _attn_apply(
             kc, vc = attn_lib.update_kv_cache(cache["k"], cache["v"], k, v, slot)
             n_valid = jnp.minimum(cache_pos + s, kc.shape[1])
             out = attn_lib.decode_attention(q, kc, vc, n_valid, window=0)
+            new_cache = {"k": kc, "v": vc}
+        elif "pk" in cache:
+            # paged: scatter into the shared page pool by block table, then
+            # gather this batch's logical view; the length limit inside
+            # decode_attention masks every unwritten/garbage position
+            bs = cache["pk"].shape[1]
+            pk, pv = attn_lib.paged_update_kv_cache(
+                cache["pk"], cache["pv"], k, v, cache_pos, block_tables, bs)
+            kc, vc = attn_lib.paged_gather_kv(pk, pv, block_tables, bs)
+            out = attn_lib.decode_attention(q, kc, vc, cache_pos + s)
+            new_cache = {"pk": pk, "pv": pv}
         else:
             kc, vc = attn_lib.update_kv_cache(cache["k"], cache["v"], k, v, cache_pos)
             out = attn_lib.decode_attention(q, kc, vc, cache_pos + s)
-        new_cache = {"k": kc, "v": vc}
+            new_cache = {"k": kc, "v": vc}
         if ctx is not None:
             # Pin the attention output's sharding before the wo contraction.
             # With wo row-sharded, GSPMD otherwise propagates a head-dim
@@ -135,7 +147,7 @@ def _ffn_apply(params, cfg: ModelConfig, x, ctx):
 
 def layer_apply(
     params, cfg: ModelConfig, kind: str, x, positions, *,
-    state=None, cache_pos=None, ctx=None,
+    state=None, cache_pos=None, ctx=None, block_tables=None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Pre-norm residual block. Returns (x, new_state, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -145,6 +157,7 @@ def layer_apply(
         out, new_mix_state = _attn_apply(
             params["attn"], cfg, h, positions, window=window,
             cache=state, cache_pos=cache_pos, ctx=ctx,
+            block_tables=block_tables,
         )
     elif kind == "rglru":
         out, new_mix_state = rglru_lib.rglru_apply(params["rglru"], h, state)
@@ -182,9 +195,20 @@ def layer_apply(
 # ---------------------------------------------------------------------------
 
 
-def layer_init_state(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def layer_init_state(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+                     paging=None):
+    """``paging=(n_blocks, block_size)`` switches full-attention layers to a
+    slot-shared page pool (``pk``/``pv`` leaves, no batch axis) addressed by
+    per-slot block tables; windowed/recurrent kinds keep dense per-slot
+    state (their footprint is already O(window) / O(1) per slot)."""
     hd = cfg.resolved_head_dim
     if kind == "attn":
+        if paging is not None:
+            n_blocks, block_size = paging
+            return {
+                "pk": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, hd), dtype),
+                "pv": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, hd), dtype),
+            }
         return {
             "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
@@ -215,18 +239,32 @@ def stack_state_map(cfg: ModelConfig, fn, *states):
     layer axis, so their slot axis is 1; unrolled layers (and period-scan
     ``rest_*`` tails) keep the slot axis at 0.  The serving slot pool uses
     this to reset/insert a single slot without knowing the layout.
+
+    Paged page pools (``pk``/``pv`` leaves) have NO slot axis — they are
+    shared storage addressed by block tables, and slot semantics (reset,
+    insert, freeze) live entirely in the tables and refcounts.  Per-slot
+    surgery therefore passes them through from the FIRST state tree
+    untouched: reset keeps the pool, insert keeps the destination pool,
+    and merge (new-first) takes the freshly-written pool — numerically
+    safe because a masked slot's stale pages sit past its length limit,
+    where attention zeroes them exactly.
     """
+    def mapper(axis, *trees):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, *ls: (
+                ls[0] if getattr(path[-1], "key", None) in ("pk", "pv")
+                else fn(axis, *ls)),
+            *trees)
+
     if _use_scan(cfg):
-        return jax.tree.map(lambda *ls: fn(1, *ls), *states)
+        return mapper(1, *states)
     if _use_period_scan(cfg):
-        out = {"groups": jax.tree.map(
-            lambda *ls: fn(1, *ls), *[s["groups"] for s in states])}
+        out = {"groups": mapper(1, *[s["groups"] for s in states])}
         for key in states[0]:
             if key != "groups":
-                out[key] = jax.tree.map(
-                    lambda *ls: fn(0, *ls), *[s[key] for s in states])
+                out[key] = mapper(0, *[s[key] for s in states])
         return out
-    return jax.tree.map(lambda *ls: fn(0, *ls), *states)
+    return mapper(0, *states)
 
 
 # ---------------------------------------------------------------------------
@@ -280,11 +318,11 @@ def stack_init(key, cfg: ModelConfig):
     }
 
 
-def stack_init_state(cfg: ModelConfig, batch: int, max_len: int):
+def stack_init_state(cfg: ModelConfig, batch: int, max_len: int, paging=None):
     dtype = dtype_of(cfg.dtype)
     if _use_scan(cfg):
         kind = cfg.block_pattern[0]
-        one = layer_init_state(cfg, kind, batch, max_len, dtype)
+        one = layer_init_state(cfg, kind, batch, max_len, dtype, paging)
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
         )
@@ -295,7 +333,8 @@ def stack_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "groups": {
                 str(pos): jax.tree.map(
                     lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
-                    layer_init_state(cfg, cfg.block_pattern[pos], batch, max_len, dtype),
+                    layer_init_state(cfg, cfg.block_pattern[pos], batch, max_len,
+                                     dtype, paging),
                 )
                 for pos in range(p)
             }
@@ -303,10 +342,11 @@ def stack_init_state(cfg: ModelConfig, batch: int, max_len: int):
         for j in range(rest):
             i = n_groups * p + j
             state[f"rest_{j}"] = layer_init_state(cfg, cfg.block_kind(i), batch,
-                                                  max_len, dtype)
+                                                  max_len, dtype, paging)
         return state
     return {
-        f"layer_{i}": layer_init_state(cfg, cfg.block_kind(i), batch, max_len, dtype)
+        f"layer_{i}": layer_init_state(cfg, cfg.block_kind(i), batch, max_len,
+                                       dtype, paging)
         for i in range(cfg.n_layers)
     }
 
@@ -314,6 +354,7 @@ def stack_init_state(cfg: ModelConfig, batch: int, max_len: int):
 def stack_apply(
     layers, cfg: ModelConfig, x, positions, *,
     states=None, cache_pos=None, ctx=None, remat: bool = True,
+    block_tables=None,
 ):
     """Run all layers. Returns (x, new_states, aux_total)."""
     decode = states is not None
@@ -327,8 +368,11 @@ def stack_apply(
                 lp, st = xs
             else:
                 lp, st = xs, None
+            # block_tables is closed over: a scan constant, identical for
+            # every layer (block ids are shared across the stack)
             h, new_st, a = layer_apply(
-                lp, cfg, kind, h, positions, state=st, cache_pos=cache_pos, ctx=ctx
+                lp, cfg, kind, h, positions, state=st, cache_pos=cache_pos,
+                ctx=ctx, block_tables=block_tables
             )
             return (h, aux + a), new_st
 
@@ -354,6 +398,7 @@ def stack_apply(
                 h, new_st, a = layer_apply(
                     lps[str(pos)], cfg, cfg.block_pattern[pos], h, positions,
                     state=st, cache_pos=cache_pos, ctx=ctx,
+                    block_tables=block_tables,
                 )
                 aux = aux + a
                 if decode:
@@ -373,7 +418,7 @@ def stack_apply(
             st = states[f"rest_{j}"] if decode else None
             fn = functools.partial(
                 layer_apply, cfg=cfg, kind=cfg.block_kind(i),
-                cache_pos=cache_pos, ctx=ctx,
+                cache_pos=cache_pos, ctx=ctx, block_tables=block_tables,
             )
             if remat and not decode:
                 x, _, a = jax.checkpoint(
@@ -394,7 +439,7 @@ def stack_apply(
         st = states[f"layer_{i}"] if decode else None
         fn = functools.partial(
             layer_apply, cfg=cfg, kind=cfg.block_kind(i),
-            cache_pos=cache_pos, ctx=ctx,
+            cache_pos=cache_pos, ctx=ctx, block_tables=block_tables,
         )
         if remat and not decode:
             fn = jax.checkpoint(

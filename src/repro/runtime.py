@@ -133,15 +133,31 @@ class ServeResult:
 def synthetic_trace(n_requests: int, *, prompt_len: int, max_new: int,
                     vocab_size: int, arrival: str = "staggered",
                     gap_ms: float = 20.0, rate: float = 50.0,
-                    seed: int = 0) -> List[Any]:
+                    seed: int = 0, prefix_share: float = 0.0,
+                    prefix_len: int = 0) -> List[Any]:
     """Deterministic request trace (random prompts + an arrival process:
     ``all`` at t=0, ``staggered`` every ``gap_ms``, or ``poisson`` at
-    ``rate``/s) — the trace builder the serve launcher and benches share."""
+    ``rate``/s) — the trace builder the serve launcher and benches share.
+
+    ``prefix_share`` > 0 makes that fraction of the requests (the first
+    ``round(prefix_share * n)``) open with ONE fixed random prefix of
+    ``prefix_len`` tokens followed by private random suffixes — the
+    system-prompt traffic shape the radix prefix cache exists for."""
     from repro.serving import Request
 
     rng = np.random.default_rng(seed)
     prompts = rng.integers(
         1, vocab_size, (n_requests, prompt_len)).astype(np.int32)
+    if prefix_share:
+        if not 0.0 < prefix_share <= 1.0:
+            raise ValueError(
+                f"prefix_share must be in (0, 1], got {prefix_share}")
+        if not 0 < prefix_len < prompt_len:
+            raise ValueError(
+                f"prefix_len must be in (0, prompt_len={prompt_len}), "
+                f"got {prefix_len}")
+        shared = rng.integers(1, vocab_size, (prefix_len,)).astype(np.int32)
+        prompts[: int(round(prefix_share * n_requests)), :prefix_len] = shared
     if arrival == "all":
         arrivals = np.zeros(n_requests)
     elif arrival == "staggered":
@@ -324,6 +340,8 @@ class Runtime:
               ttft_deadline_ms: Optional[float] = None,
               inject_fault: Optional[str] = None,
               watchdog_ms: Optional[float] = None, max_retries: int = 2,
+              paged: bool = False, block_size: int = 16,
+              kv_blocks: Optional[int] = None, prefix_cache="auto",
               now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
@@ -350,6 +368,14 @@ class Runtime:
         failure drills; ``watchdog_ms`` bounds any single device step
         (required for ``stall``), with up to ``max_retries`` backoff
         retries before in-flight requests FAIL.
+
+        Paged KV (continuous mode only; DESIGN.md §5): ``paged=True``
+        stores full-attention KV in a shared BlockPool of
+        ``block_size``-token pages (``kv_blocks`` overrides the
+        can-never-OOM default) with per-slot block tables, and
+        ``prefix_cache`` controls radix prefix reuse at admission
+        (``'auto'`` = the serve_prefix CostQuery decides per prompt,
+        ``'force'`` pins reuse on, ``False`` disables the trie).
 
         ``static`` is the lockstep baseline: the batch forms at the last
         arrival and every request's latency includes that wait; it requires
@@ -393,6 +419,12 @@ class Runtime:
                 "queue_limit/deadline/fault/watchdog options need the "
                 "request lifecycle of mode='continuous'; the static "
                 "lockstep baseline has no per-request scheduling")
+        if mode == "static" and paged:
+            raise ValueError(
+                "paged KV needs the slot pool of mode='continuous'; the "
+                "static lockstep baseline keeps dense per-row caches")
+        if paged and block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
         mesh = None
         if mesh_shape is not None:
             from repro.distributed.sharding import validate_serve_mesh
@@ -475,7 +507,10 @@ class Runtime:
                 pad_id=pad_id, cost_engine=self.engine,
                 prefill_chunk=prefill_chunk, macro_step=macro_step,
                 mesh=mesh, shard_params=shard_params,
-                queue_limit=queue_limit, max_retries=max_retries)
+                queue_limit=queue_limit, max_retries=max_retries,
+                paged=paged, block_size=block_size, kv_blocks=kv_blocks,
+                prefix_cache=(True if prefix_cache == "auto"
+                              else prefix_cache))
             if warmup:
                 # compile prefill (shape keys on the trace-wide max prompt
                 # length every group pads to) AND every macro horizon the

@@ -7,10 +7,15 @@ engine.py    — ServeEngine (fixed-batch anchor, one-call batched prefill)
                preemption, bounded queue, watchdogged retries)
 slots.py     — SlotPool: per-slot insert/reset/evict of pooled decode state
                (donated buffers, host occupancy/position mirrors, drain()
-               failure-path reset)
+               failure-path reset; optional paged KV block tables + jitted
+               copy-on-write page duplication)
+paging.py    — BlockPool: refcounted fixed-size KV pages + the radix prefix
+               trie over full blocks (lookup/insert/LRU-evict/drain; pure
+               host-side bookkeeping, zero device syncs)
 scheduler.py — Request lifecycle state machine + ServeScheduler (site=serve
-               / serve_macro / serve_admit CostEngine decisions: admission,
-               prefill chunk, macro horizon, deadline-aware load shedding)
+               / serve_macro / serve_admit / serve_prefix CostEngine
+               decisions: admission, prefill chunk, macro horizon,
+               deadline-aware load shedding, prefix-cache reuse)
 faults.py    — FaultSpec/FaultInjector (raise | nan | stall) + guarded_call
                (watchdog + bounded retry-with-backoff around device steps)
 """
@@ -28,6 +33,11 @@ from repro.serving.faults import (  # noqa: F401
     InjectedFault,
     StepFailed,
     guarded_call,
+)
+from repro.serving.paging import (  # noqa: F401
+    BlockPool,
+    PrefixMatch,
+    default_kv_blocks,
 )
 from repro.serving.scheduler import (  # noqa: F401
     InvalidRequestError,

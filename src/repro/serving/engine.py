@@ -52,6 +52,7 @@ from repro.serving.scheduler import (
     supports_chunked_prefill,
     validate_request,
 )
+from repro.serving.paging import default_kv_blocks
 from repro.serving.slots import SlotPool
 from repro.training.step import (
     make_batched_prefill,
@@ -188,6 +189,14 @@ class ServeReport:
     # failure-path accounting (all zero on an unperturbed trace)
     step_retries: int = 0
     watchdog_fires: int = 0
+    # paged-KV memory accounting (all zero on a dense engine).  Every
+    # number comes from HOST MIRRORS the engine already maintains —
+    # reading them costs no device sync.
+    live_tokens: int = 0        # peak sum of per-slot cache positions
+    reserved_blocks: int = 0    # peak BlockPool pages in use (slots + trie)
+    prefix_hit_tokens: int = 0  # prompt tokens served from the radix cache
+    prefilled_tokens: int = 0   # prompt tokens actually prefilled
+    cow_count: int = 0          # copy-on-write page duplications
 
     def state_counts(self) -> Dict[str, int]:
         """How many requests ended in each lifecycle state."""
@@ -228,6 +237,13 @@ class ServeReport:
     def host_syncs_per_token(self) -> float:
         return self.host_syncs / max(self.generated_tokens, 1)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the radix prefix cache
+        instead of being prefilled (0.0 on a dense engine)."""
+        total = self.prefix_hit_tokens + self.prefilled_tokens
+        return self.prefix_hit_tokens / total if total else 0.0
+
     def latency_percentiles(self, qs=(50, 95)) -> Dict[str, float]:
         lats = [r.latency_s for r in self.requests if r.latency_s is not None]
         if not lats:
@@ -250,6 +266,12 @@ class ServeReport:
             "step_retries": self.step_retries,
             "watchdog_fires": self.watchdog_fires,
             "preemptions": self.preemptions,
+            "live_tokens": self.live_tokens,
+            "reserved_blocks": self.reserved_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefilled_tokens": self.prefilled_tokens,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "cow_count": self.cow_count,
             **self.latency_percentiles(),
             "requests": [
                 {
@@ -300,7 +322,10 @@ class ContinuousServeEngine:
                  queue_limit: Optional[int] = None,
                  watchdog_s: Optional[float] = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.01,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 paged: bool = False, block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -327,6 +352,40 @@ class ContinuousServeEngine:
         if macro_step != "auto":
             macro_step = max(int(macro_step), 1)
         self.macro_step = macro_step
+        # --- paged KV pool + radix prefix cache (DESIGN.md §5) ---
+        self.paged = bool(paged)
+        self.block_size = int(block_size)
+        self.kv_blocks: Optional[int] = None
+        if self.paged:
+            if model.cfg.is_encdec:
+                raise ValueError(
+                    "paged=True supports decoder-only models (enc-dec decode "
+                    "state has no paged layout)")
+            if self.block_size < 1:
+                raise ValueError(
+                    f"block_size must be >= 1, got {block_size}")
+            if kv_blocks is None:
+                kv_blocks = default_kv_blocks(n_slots, max_len,
+                                              self.block_size)
+            self.kv_blocks = int(kv_blocks)
+        # prefix reuse skips prefilling matched prompt tokens, which is
+        # only sound when EVERY layer's prompt state lives in the paged
+        # pool: window ring buffers and recurrent states stay per-slot
+        # dense, so families with local/rglru/rwkv layers keep the paged
+        # memory layout but always prefill in full.  'force' pins the
+        # serve_prefix verdict to use_prefix (still priced + ledgered) —
+        # toy-scale models where a CoW dispatch outweighs the skipped
+        # prefill would otherwise never exercise reuse.
+        if prefix_cache not in (True, False, "auto", "force"):
+            raise ValueError(
+                f"prefix_cache must be True/False/'auto'/'force', "
+                f"got {prefix_cache!r}")
+        all_attn = all(model.cfg.block_kind(i) == "attn"
+                       for i in range(model.cfg.n_layers))
+        self.prefix_cache = (prefix_cache is not False
+                             and self.paged and all_attn)
+        self._prefix_override = ("use_prefix" if prefix_cache == "force"
+                                 else None)
         self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
         # --- mesh placement: shard-vs-replicate is a CostQuery, not a flag
         if shard_params not in ("auto", "shard", "replicate"):
@@ -365,11 +424,16 @@ class ContinuousServeEngine:
                     params,
                     param_shardings(jax.eval_shape(lambda: params), mesh,
                                     data_axes=()))
+                pkw = ({"paging": (self.kv_blocks, self.block_size)}
+                       if self.paged else {})
                 self._state_shardings = serve_state_sharding(
                     jax.eval_shape(lambda: model.init_decode_state(
-                        n_slots, max_len, per_slot=True)), mesh)
+                        n_slots, max_len, per_slot=True, **pkw)), mesh)
         self.pool = SlotPool(model, n_slots, max_len,
-                             shardings=self._state_shardings)
+                             shardings=self._state_shardings,
+                             block_size=(self.block_size if self.paged
+                                         else None),
+                             kv_blocks=self.kv_blocks)
         # pooled decode state is donated through both hot-path programs:
         # cache updates run in place, never copy-on-write.  Under sharding,
         # out_shardings pins (replicated tokens, same state layout) so the
@@ -395,6 +459,14 @@ class ContinuousServeEngine:
         # overhead accounting (engine-lifetime; ServeReport carries deltas)
         self.host_syncs = 0
         self.device_dispatches = 0
+        # paged-KV accounting: hit/prefill/CoW counters are engine-lifetime
+        # (reports carry deltas); peaks are reset per run.  Host mirrors
+        # only — never a device sync.
+        self.prefix_hit_tokens = 0
+        self.prefilled_tokens = 0
+        self.cow_count = 0
+        self._peak_live_tokens = 0
+        self._peak_blocks = 0
 
     def _macro(self, horizon: int) -> Callable:
         """Compiled K-token macro-step, cached per horizon (the candidate
@@ -480,14 +552,64 @@ class ContinuousServeEngine:
         A request re-admitted after preemption prefills prompt + the
         tokens it already generated: greedy decode is deterministic, so
         the continuation is token-identical to an uninterrupted run (its
-        original ``admitted_s`` / ``first_token_s`` stamps are kept)."""
+        original ``admitted_s`` / ``first_token_s`` stamps are kept).
+
+        PAGED admission adds the radix prefix cache (the tenth cost site,
+        ``CostQuery(kind=serve_prefix)``): each request's prompt is looked
+        up in the block trie, a ``use_prefix`` verdict pins the matched
+        pages into the slot's table (partial-tail matches copy-on-write
+        ONE page) and prefills only the suffix; the full prompt's pages
+        are inserted back into the trie after prefill so the next request
+        sharing the prefix hits.  A preempted request re-admitted here
+        re-pins its own prompt's pages the same way."""
         slots = [self.pool.acquire(r) for r in reqs]
         prompts = [np.concatenate([np.asarray(r.prompt, np.int32),
                                    np.asarray(r.tokens, np.int32)])
                    if r.tokens else np.asarray(r.prompt, np.int32)
                    for r in reqs]
-        lmax = max([int(p.shape[-1]) for p in prompts]
-                   + [self._group_pad or 0])
+        starts = np.zeros((self.pool.n_slots,), np.int32)
+        prefix_decs = []  # (decision, prompt_len, applied) per request
+        any_hit = False
+        if self.paged:
+            bs = self.block_size
+            for r, s, p in zip(reqs, slots, prompts):
+                plen = int(p.shape[-1])
+                toks = tuple(int(t) for t in p)
+                match = (self.pool.blocks.lookup(toks)
+                         if self.prefix_cache else None)
+                hit = match.hit_tokens(bs) if match is not None else 0
+                cow = 1 if (match is not None
+                            and match.tail_donor is not None) else 0
+                applied, dec_p = self.scheduler.serve_prefix(
+                    plen, hit_tokens=hit, cow_blocks=cow, block_size=bs,
+                    override=self._prefix_override)
+                if applied > 0:
+                    self.pool.assign_prefix(s, match.block_ids)
+                    if match.tail_donor is not None:
+                        self.pool.cow_block(s, match.tail_donor)
+                        self.cow_count += 1
+                    starts[s] = applied
+                    any_hit = True
+                elif match is not None:
+                    # full-prefill verdict: drop the lookup's pins
+                    self.pool.blocks.release(match.block_ids)
+                    if match.tail_donor is not None:
+                        self.pool.blocks.decref(match.tail_donor)
+                self.pool.ensure_blocks(s, plen)
+                self.prefix_hit_tokens += applied
+                self.prefilled_tokens += plen - applied
+                prefix_decs.append((dec_p, plen, applied))
+        else:
+            self.prefilled_tokens += sum(int(p.shape[-1]) for p in prompts)
+        # prefix-hit rows prefill SUFFIX tokens only (never empty: the
+        # lookup caps hits at prompt_len - 1 so the first generated token
+        # always comes from a real forward).  A group with any hit pads to
+        # the longest suffix instead of the trace-wide prompt pad — that's
+        # the compute reduction; the extra compiled prefill shapes are
+        # bounded by the chunk grid.
+        suffixes = [p[int(starts[s]):] for s, p in zip(slots, prompts)]
+        lmax = max([int(sfx.shape[-1]) for sfx in suffixes]
+                   + ([] if any_hit else [self._group_pad or 0]))
         override = None if self.prefill_chunk == "auto" else self.prefill_chunk
         chunk, dec = self.scheduler.prefill_chunk(
             lmax, active_decodes=self.pool.active_count - len(reqs),
@@ -495,21 +617,27 @@ class ContinuousServeEngine:
         tokens = np.zeros((self.pool.n_slots, lmax), np.int32)
         lengths = np.zeros((self.pool.n_slots,), np.int32)
         t_adm = now()
-        for r, s, p in zip(reqs, slots, prompts):
+        for r, s, sfx in zip(reqs, slots, suffixes):
             if r.admitted_s is None:
                 r.admitted_s = t_adm
             r.mark(RequestState.PREFILLING, t_adm)
-            tokens[s, : p.shape[-1]] = p
-            lengths[s] = p.shape[-1]
+            tokens[s, : sfx.shape[-1]] = sfx
+            lengths[s] = sfx.shape[-1]
         chunks = jnp.asarray(_prefill_chunks(tokens, chunk))
         lens = jnp.asarray(lengths)
+        if self.paged:
+            starts_in = jnp.asarray(starts)
+            bt_in = self.pool.block_tables()
+            extra = (starts_in, bt_in)
+        else:
+            extra = ()
         self.collective_ops += self._count_collectives(
             ("prefill", chunks.shape), self._prefill,
-            self.params, self.pool.state, chunks, lens)
+            self.params, self.pool.state, chunks, lens, *extra)
 
         def thunk(cancel):
             first, new_state = self._prefill(
-                self.params, self.pool.state, chunks, lens)
+                self.params, self.pool.state, chunks, lens, *extra)
             # ONE host sync for the whole group; syncing INSIDE the guarded
             # call means the watchdog covers the device execution, not just
             # the async dispatch
@@ -522,6 +650,11 @@ class ContinuousServeEngine:
         self.host_syncs += 1
         self.scheduler.record_measured(
             dec, dt, note=f"prefill group={len(reqs)} len={lmax} chunk={chunk}")
+        for dec_p, plen, applied in prefix_decs:
+            self.scheduler.record_measured(
+                dec_p, dt,
+                note=f"serve_prefix len={plen} hit={applied} "
+                     f"group={len(reqs)}")
         t_first = now()
         for r, s, p in zip(reqs, slots, prompts):
             tk = int(first_np[s])
@@ -529,6 +662,13 @@ class ContinuousServeEngine:
             if r.first_token_s is None:
                 r.first_token_s = t_first
             self.pool.set_pos(s, int(p.shape[-1]))
+            if self.prefix_cache:
+                # publish the full prompt's pages into the trie BEFORE any
+                # release: pinned there, they survive slot turnover (dedupe
+                # swaps repoint this slot at already-resident duplicates)
+                swaps = self.pool.blocks.insert(
+                    tuple(int(t) for t in p), self.pool.slot_table(s))
+                self.pool.apply_swaps(s, swaps)
             if tk == self.eos_id or len(r.tokens) >= r.max_new_tokens:
                 r.mark(RequestState.COMPLETED, t_first)
                 self.pool.release(s)
@@ -538,6 +678,11 @@ class ContinuousServeEngine:
                 r.mark(RequestState.DECODING, t_first)
                 self._last_tok[s] = tk
                 self._budget[s] = r.max_new_tokens - len(r.tokens)
+        self._peak_live_tokens = max(self._peak_live_tokens,
+                                     int(self.pool.positions().sum()))
+        if self.paged:
+            self._peak_blocks = max(self._peak_blocks,
+                                    self.pool.blocks.used_blocks)
 
     # ------------------------------------------------------------------
 
@@ -568,6 +713,10 @@ class ContinuousServeEngine:
         disp0 = self.device_dispatches + self.pool.dispatch_count
         col0 = self.collective_ops
         ret0, wd0 = self.step_retries, self.watchdog_fires
+        hit0, pf0, cow0 = (self.prefix_hit_tokens, self.prefilled_tokens,
+                           self.cow_count)
+        self._peak_live_tokens = 0
+        self._peak_blocks = 0
         # attach ONE measured wall time per run to the serve_shard row (the
         # first macro-step, normalized per decode step)
         self._shard_pending = self._shard_decision is not None
@@ -704,14 +853,30 @@ class ContinuousServeEngine:
                 tok_in = jnp.asarray(self._last_tok)
                 mask_in = jnp.asarray(mask)
                 budget_in = jnp.asarray(self._budget)
+                if self.paged:
+                    # grow each live slot's table to cover this macro-step's
+                    # K cache writes, then upload the tables (fixed shape —
+                    # no recompile; async — no host sync; NOT donated)
+                    pos = self.pool.positions()
+                    for s in active:
+                        self.pool.ensure_blocks(s, int(pos[s]) + horizon)
+                    mextra = (self.pool.block_tables(),)
+                    self._peak_live_tokens = max(self._peak_live_tokens,
+                                                 int(pos.sum()))
+                    self._peak_blocks = max(self._peak_blocks,
+                                            self.pool.blocks.used_blocks)
+                else:
+                    mextra = ()
                 self.collective_ops += self._count_collectives(
                     ("macro", horizon), macro_fn,
-                    self.params, self.pool.state, tok_in, mask_in, budget_in)
+                    self.params, self.pool.state, tok_in, mask_in, budget_in,
+                    *mextra)
 
                 def thunk(cancel, _fn=macro_fn, _tok=tok_in, _mask=mask_in,
-                          _budget=budget_in):
+                          _budget=budget_in, _extra=mextra):
                     emitted, new_state = _fn(
-                        self.params, self.pool.state, _tok, _mask, _budget)
+                        self.params, self.pool.state, _tok, _mask, _budget,
+                        *_extra)
                     # THE host sync for K tokens, inside the guard so the
                     # watchdog covers device execution, not just dispatch
                     return np.asarray(emitted), new_state
@@ -815,7 +980,12 @@ class ContinuousServeEngine:
                           if self.mesh is not None else 1),
             collective_ops=self.collective_ops - col0,
             step_retries=self.step_retries - ret0,
-            watchdog_fires=self.watchdog_fires - wd0)
+            watchdog_fires=self.watchdog_fires - wd0,
+            live_tokens=self._peak_live_tokens,
+            reserved_blocks=self._peak_blocks,
+            prefix_hit_tokens=self.prefix_hit_tokens - hit0,
+            prefilled_tokens=self.prefilled_tokens - pf0,
+            cow_count=self.cow_count - cow0)
 
     def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
         """Compile the prefill/decode/reset executables outside any timed
@@ -838,8 +1008,10 @@ class ContinuousServeEngine:
                     if k <= max(max_new_tokens - 1, 1)]
         if self.macro_step != "auto":
             horizons = [self.macro_step]
+        idle_extra = (self.pool.block_tables(),) if self.paged else ()
         for k in horizons:
             emitted, self.pool.state = self._macro(k)(
-                self.params, self.pool.state, idle_tok, idle_mask, idle_budget)
+                self.params, self.pool.state, idle_tok, idle_mask,
+                idle_budget, *idle_extra)
             np.asarray(emitted)
         self._last_macro_key = None

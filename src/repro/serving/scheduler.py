@@ -200,6 +200,7 @@ class ServeScheduler:
                  macro_candidates: Tuple[int, ...] = MACRO_STEP_CANDIDATES):
         self.cfg = cfg
         self.engine = resolve_engine(engine)
+        self.max_len = int(max_len)
         self.chunk_candidates = tuple(chunk_candidates)
         self.macro_candidates = tuple(macro_candidates)
         self.dtype_bytes = 4 if cfg.dtype == "float32" else 2
@@ -208,6 +209,13 @@ class ServeScheduler:
         self.flops_per_token = 2 * active_params
         self.weight_bytes = active_params * self.dtype_bytes
         self.kv_bytes_per_slot = self._kv_bytes_per_slot(cfg, max_len)
+        # per-TOKEN KV bytes across full-attention layers (the unit the
+        # paged pool allocates in; prices prefix-cache CoW page copies)
+        hd = cfg.resolved_head_dim
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_kind(i) == "attn")
+        self.kv_bytes_per_token = (
+            2 * n_attn * cfg.n_kv_heads * hd * self.dtype_bytes)
 
     @staticmethod
     def _kv_bytes_per_slot(cfg: ModelConfig, max_len: int) -> int:
@@ -243,6 +251,17 @@ class ServeScheduler:
             candidates = (int(override),)
         else:
             candidates = self.chunk_candidates
+        # drop chunk widths whose PADDED prompt (ceil(len/c)*c) overflows
+        # max_len: the prefill program's vmapped dynamic_update_slice would
+        # clamp the final chunk's start index and overwrite real cache rows
+        # (chunk 8, prompt 13, max_len 14: chunk 2 start clamps 8 -> 6).
+        # chunk 1 never pads, so the fallback is always safe. Prompts that
+        # exceed max_len outright never reach the prefill program (rejected
+        # at admission), so hypothetical cost queries skip the filter.
+        if prompt_len <= self.max_len:
+            candidates = tuple(
+                c for c in candidates
+                if c == 1 or -(-prompt_len // c) * c <= self.max_len) or (1,)
         dec = self.engine.decide_serve_prefill_chunk(
             prompt_len, flops_per_token=self.flops_per_token,
             weight_bytes=self.weight_bytes, active_decodes=active_decodes,
@@ -348,6 +367,30 @@ class ServeScheduler:
             kv_bytes_per_slot=self.kv_bytes_per_slot,
             n_layers=self.cfg.n_layers, d_model=self.cfg.d_model,
             dtype_bytes=self.dtype_bytes, candidates=candidates)
+        return int(dec.value), dec
+
+    def serve_prefix(self, prompt_len: int, *, hit_tokens: int,
+                     cow_blocks: int, block_size: int,
+                     override: Optional[str] = None
+                     ) -> Tuple[int, Decision]:
+        """Prefix-cache reuse vs full prefill for one admitted prompt — the
+        tenth decision site (CostQuery kind=serve_prefix).
+
+        ``hit_tokens`` is the radix-trie match length the BlockPool found
+        (full shared blocks plus an optional partial tail served by one
+        copy-on-write page duplication, ``cow_blocks``).  The sweep weighs
+        the skipped prefill compute for those tokens against the host
+        lookup/pin walk and the CoW page copy; the engine executes the
+        verdict (suffix-only prefill vs dropping the pins) and attaches the
+        admitted group's measured prefill wall time.  Returns the applied
+        hit length (0 = full prefill)."""
+        dec = self.engine.decide_serve_prefix(
+            prompt_len, hit_tokens=hit_tokens, cow_blocks=cow_blocks,
+            chunk=prompt_len, block_size=block_size,
+            flops_per_token=self.flops_per_token,
+            weight_bytes=self.weight_bytes,
+            kv_bytes_per_token=self.kv_bytes_per_token,
+            dtype_bytes=self.dtype_bytes, override=override)
         return int(dec.value), dec
 
     def record_measured(self, decision: Decision, seconds: float,

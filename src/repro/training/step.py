@@ -142,11 +142,17 @@ def make_decode_macro_step(model: Model, horizon: int, *, eos_id: int,
     mrope = model.cfg.pos_type == "mrope"
     k_steps = max(int(horizon), 1)
 
-    def macro_fn(params, state, tok, active, budget):
+    def macro_fn(params, state, tok, active, budget, block_tables=None):
         def body(carry, _):
             st, tk, act, bud = carry
             feed = jnp.where(act, tk, jnp.int32(pad_id))[:, None]
             batch = {"tokens": feed}
+            if block_tables is not None:
+                # zero inactive rows' tables so their masked writes land in
+                # the null block — a released slot's pages may already belong
+                # to someone else, and ``act`` can flip mid-macro-step
+                batch["block_tables"] = jnp.where(
+                    act[:, None], block_tables, 0)
             if mrope:
                 batch["positions"] = mrope_positions(feed.shape[0], 1, st["pos"])
             logits, new_st = model.decode_step(params, st, batch, ctx)
@@ -175,17 +181,30 @@ def make_batched_prefill(model: Model, ctx=None) -> Callable:
     advance limit, where the causal ``decode_attention`` mask never reads
     it before a real decode write overwrites it.
 
-    ``prefill_fn(params, state, chunks, lengths) -> (first_tok (B,), state)``
-    with ``chunks`` (n_chunks, B, c) int32 padded prompt chunks and
-    ``lengths`` (B,) true prompt lengths (0 marks a slot not prefilled).
-    Chunk width and count are static shapes; the chunk width is the
-    scheduler's ``prefill_chunk`` decision (1 pins the exact per-token
-    replay for families without a chunked decode form).
+    ``prefill_fn(params, state, chunks, lengths, starts=None,
+    block_tables=None) -> (first_tok (B,), state)`` with ``chunks``
+    (n_chunks, B, c) int32 padded prompt chunks and ``lengths`` (B,) true
+    prompt lengths (0 marks a slot not prefilled).  Chunk width and count
+    are static shapes; the chunk width is the scheduler's ``prefill_chunk``
+    decision (1 pins the exact per-token replay for families without a
+    chunked decode form).
+
+    With a radix prefix-cache hit, ``chunks``/``lengths`` carry only the
+    SUFFIX tokens and ``starts`` (B,) gives each prefilled row's first
+    logical position (its prefix hit length): positions, cache writes and
+    the length limit all continue from the reused prefix.  ``block_tables``
+    routes paged cache writes; rows not being prefilled get their table
+    zeroed so masked writes land in the null block.
     """
     mrope = model.cfg.pos_type == "mrope"
 
-    def prefill_fn(params, state, chunks, lengths):
+    def prefill_fn(params, state, chunks, lengths, starts=None,
+                   block_tables=None):
         n_chunks, b, c = chunks.shape
+        if starts is not None:
+            state = dict(state)
+            state["pos"] = jnp.where(
+                lengths > 0, jnp.asarray(starts, jnp.int32), state["pos"])
 
         def body(carry, xs):
             st, first = carry
@@ -194,6 +213,9 @@ def make_batched_prefill(model: Model, ctx=None) -> Callable:
             valid = jnp.clip(lengths - off, 0, c)  # true tokens this chunk
             act = valid > 0
             batch = {"tokens": tok}
+            if block_tables is not None:
+                batch["block_tables"] = jnp.where(
+                    act[:, None], block_tables, 0)
             if mrope:
                 batch["positions"] = mrope_positions(b, c, st["pos"])
             logits, new_st = model.decode_step(params, st, batch, ctx)
