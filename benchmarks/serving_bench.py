@@ -62,7 +62,7 @@ from repro.models import build_model
 from repro.runtime import Runtime, synthetic_trace
 
 BENCH_JSON = "BENCH_serving.json"
-TRAJECTORY_TAG = "pr8-paged-kv"
+TRAJECTORY_TAG = "pr9-frontend-ipc"
 REGRESSION_FRACTION = 0.8  # fail below 80% of the committed baseline
 # the paged/dense ratio divides two ~10ms walls, so runner noise moves it
 # far more than the static-normalized ratio — wider guard, same idea
@@ -83,12 +83,14 @@ SHARD_DEVICES = 8
 # tail at block_size=4
 BLOCK_SIZE = 4
 PREFIX_LEN = 6
-# the shared-prefix row serializes admission: group prefill is ONE
-# dispatch and trie lookups precede it, so requests admitted in the same
-# group cannot see each other's pages — one slot makes every admission
-# its own group (first request prefills the prefix, the rest reuse it)
-# and the hit rate deterministic
-PREFIX_SLOTS = 1
+# the shared-prefix row used to serialize admission (1 slot): group
+# prefill is ONE dispatch and trie lookups precede it, so requests
+# admitted in the same group could not see each other's pages.  The
+# scheduler now SPLITS an admission group when the trie predicts a
+# within-group prefix overlap (the donor prefills first, the overlapping
+# members re-queue and hit its pages), so the row runs at full SLOTS and
+# the hit rate no longer depends on 1-slot serialization
+PREFIX_SLOTS = SLOTS
 
 
 def _trace(cfg, *, arrival: str, prefix_share: float = 0.0):

@@ -10,9 +10,13 @@ Three stages, all machine-normalized so the gate is robust to runner speed:
   overload  — a Poisson trace at ``OVERLOAD_FACTOR``x the measured service
               rate, with a bounded queue and per-request deadlines at
               ``DEADLINE_X``x the measured unloaded latency, run under the
-              watchdog.  The engine must shed (REJECTED), expire
-              (TIMED_OUT), and finish (COMPLETED) — every request terminal,
-              nothing hangs
+              watchdog and THROUGH the multi-process front end
+              (``frontend=FRONTEND_WORKERS, stream=True``): intake
+              validation and token emission run off the engine thread, so
+              the p99 time-to-first-token under overload measures the
+              serve path, not host-side admission work.  The engine must
+              shed (REJECTED), expire (TIMED_OUT), and finish (COMPLETED)
+              — every request terminal, nothing hangs
   faults    — one drill per fault class (raise | nan | stall) injected
               mid-trace on a shared pre-compiled engine.  Transient faults
               (raise, watchdogged stall) must retry to a token-identical
@@ -27,7 +31,10 @@ modify-write: serving_bench's keys are preserved).  With ``--check-slo``
 (CI smoke: ``python benchmarks/stress_bench.py --smoke --check-slo``) the
 run additionally FAILS if the completed fraction or the goodput-over-
 unloaded ratio falls more than ``1 - SLO_FRACTION`` below the committed
-baseline row (skipped when the committed row used a different trace size).
+baseline row, or if p99 TTFT under overload — normalized by the same
+machine's unloaded mean latency, so runner speed cancels — inflates more
+than ``1 / SLO_FRACTION`` above it (skipped when the committed row used a
+different trace size).
 The suite builds its OWN Runtime so the ledger rows are exactly this
 suite's decisions.
 """
@@ -47,6 +54,9 @@ from repro.serving.faults import FaultInjector, FaultSpec
 
 BENCH_JSON = "BENCH_serving.json"
 SLO_FRACTION = 0.6  # fail below 60% of the committed baseline ratios
+# keys where lower is better (latency ratios): the gate inverts — fail
+# ABOVE committed / SLO_FRACTION instead of below committed * SLO_FRACTION
+LOWER_IS_BETTER = ("ttft_p99_over_unloaded_latency",)
 
 ARCH = "tinyllama-1.1b"
 PROMPT_LEN = 8
@@ -59,6 +69,7 @@ DEADLINE_X = 8.0            # deadline = 8x the measured unloaded latency
 QUEUE_LIMIT = 2 * SLOTS
 DRILL_REQUESTS = 4
 STALL_WATCHDOG_S = 1.0
+FRONTEND_WORKERS = 2        # overload intake/emission run off-engine-thread
 
 
 def _trace(cfg, n, *, arrival, rate=50.0, seed=0):
@@ -167,14 +178,21 @@ def run(csv=True, runtime=None, smoke: bool = True,
     rate = OVERLOAD_FACTOR * service_rate
 
     # --- overload: Poisson arrivals at 2x the machine's service rate,
-    # bounded queue + derived deadlines, watchdogged dispatch ---
+    # bounded queue + derived deadlines, watchdogged dispatch — served
+    # through the multi-process front end so intake validation and token
+    # emission are off the engine thread while the engine is saturated ---
     over = rt.serve(cfg, _trace(cfg, n_overload, arrival="poisson",
                                 rate=rate, seed=1),
                     mode="continuous", slots=SLOTS,
+                    frontend=FRONTEND_WORKERS, stream=True,
                     queue_limit=QUEUE_LIMIT, deadline_ms=deadline_ms,
                     watchdog_ms=max(5000.0, 10 * deadline_ms), **common)
     rep_o = over.report
     _assert_terminal(rep_o, "overload")
+    ttft = rep_o.ttft_percentiles()
+    ttft_over_unloaded = (ttft["ttft_p99"] / mean_latency_s
+                          if mean_latency_s > 0
+                          and np.isfinite(ttft["ttft_p99"]) else None)
     states = rep_o.state_counts()
     done = [r for r in rep_o.requests if r.state.value == "COMPLETED"]
     completed_frac = len(done) / n_overload
@@ -202,7 +220,8 @@ def run(csv=True, runtime=None, smoke: bool = True,
                   "max_new": MAX_NEW, "slots": SLOTS,
                   "queue_limit": QUEUE_LIMIT,
                   "overload_factor": OVERLOAD_FACTOR,
-                  "deadline_x": DEADLINE_X},
+                  "deadline_x": DEADLINE_X,
+                  "frontend_workers": FRONTEND_WORKERS},
         "unloaded": {"tok_per_s": rep_u.tok_per_s,
                      "mean_latency_s": mean_latency_s,
                      "service_rate_rps": service_rate},
@@ -213,11 +232,18 @@ def run(csv=True, runtime=None, smoke: bool = True,
                      "goodput_tok_per_s": goodput,
                      "step_retries": rep_o.step_retries,
                      "watchdog_fires": rep_o.watchdog_fires,
-                     "preemptions": rep_o.preemptions},
+                     "preemptions": rep_o.preemptions,
+                     "frontend_workers": rep_o.frontend_workers,
+                     "ipc_messages": rep_o.ipc_messages,
+                     "ipc_bytes": rep_o.ipc_bytes,
+                     "streamed_tokens": rep_o.streamed_tokens,
+                     "ttft_p50_s": ttft["ttft_p50"],
+                     "ttft_p99_s": ttft["ttft_p99"]},
         "faults": faults,
         "serve_admit_rows": len(admit_rows),
         "slo": {"completed_frac": completed_frac,
-                "goodput_over_unloaded": goodput_over_unloaded},
+                "goodput_over_unloaded": goodput_over_unloaded,
+                "ttft_p99_over_unloaded_latency": ttft_over_unloaded},
     }
     result = dict(previous)  # read-modify-write: keep serving_bench's keys
     result["stress"] = stress
@@ -231,7 +257,10 @@ def run(csv=True, runtime=None, smoke: bool = True,
     print(f"stress_bench,stage=overload,rate_rps={rate:.1f},"
           f"deadline_ms={deadline_ms:.0f},{st},"
           f"completed_frac={completed_frac:.2f},"
-          f"goodput_tok_s={goodput:.1f},admit_rows={len(admit_rows)}")
+          f"goodput_tok_s={goodput:.1f},admit_rows={len(admit_rows)},"
+          f"workers={rep_o.frontend_workers},"
+          f"ipc_msgs={rep_o.ipc_messages},"
+          f"ttft_p99_ms={ttft['ttft_p99']*1e3:.1f}")
     for kind, row in faults.items():
         fst = ",".join(f"{k}={v}" for k, v in sorted(row["states"].items()))
         print(f"stress_bench,stage=fault,kind={kind},{fst},"
@@ -244,10 +273,13 @@ def run(csv=True, runtime=None, smoke: bool = True,
 
 
 def _check_slo(previous: dict, stress: dict) -> None:
-    """CI smoke gate: completed fraction and goodput-over-unloaded —
-    both already ratios of same-machine measurements, so absolute runner
-    speed cancels — must stay within SLO_FRACTION of the committed row.
-    Skipped when there is no committed row or it used a different trace."""
+    """CI smoke gate: completed fraction, goodput-over-unloaded, and p99
+    TTFT-over-unloaded-latency — all ratios of same-machine measurements,
+    so absolute runner speed cancels — must stay within SLO_FRACTION of
+    the committed row (latency ratios gate from above: the p99 TTFT under
+    overload must not inflate past committed / SLO_FRACTION, which is what
+    keeping intake off the engine thread buys).  Skipped when there is no
+    committed row or it used a different trace."""
     base = previous.get("stress")
     if not base or not base.get("slo"):
         print("stress_bench,slo_check=skipped (no committed stress baseline)")
@@ -257,9 +289,20 @@ def _check_slo(previous: dict, stress: dict) -> None:
               "different trace shape)")
         return
     failures = []
-    for key in ("completed_frac", "goodput_over_unloaded"):
+    for key in ("completed_frac", "goodput_over_unloaded",
+                "ttft_p99_over_unloaded_latency"):
         committed, got = base["slo"].get(key), stress["slo"].get(key)
         if committed is None or got is None:
+            continue
+        if key in LOWER_IS_BETTER:
+            ceiling = committed / SLO_FRACTION
+            status = "ok" if got <= ceiling else "FAIL"
+            print(f"stress_bench,slo_check={status},{key}={got:.2f},"
+                  f"committed={committed:.2f},ceiling={ceiling:.2f}")
+            if got > ceiling:
+                failures.append(
+                    f"{key} {got:.2f} > {ceiling:.2f} "
+                    f"(committed {committed:.2f} / {SLO_FRACTION:.0%})")
             continue
         floor = SLO_FRACTION * committed
         status = "ok" if got >= floor else "FAIL"
@@ -281,6 +324,8 @@ if __name__ == "__main__":
     ap.add_argument("--check-slo", action="store_true",
                     help="fail if completed_frac or goodput-over-unloaded "
                          f"drops below {SLO_FRACTION:.0%} of the committed "
-                         f"{BENCH_JSON} stress row")
+                         f"{BENCH_JSON} stress row, or p99 TTFT under "
+                         f"overload inflates past the committed ratio "
+                         f"divided by {SLO_FRACTION:.0%}")
     args = ap.parse_args()
     run(smoke=args.smoke, check_slo=args.check_slo)

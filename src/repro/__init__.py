@@ -43,6 +43,9 @@ __all__ = [
     "RequestState",
     "InvalidRequestError",
     "ServeReport",
+    "FrontendConfig",
+    "TokenStream",
+    "HostTopology",
     # cost subsystem (the Runtime's internals, exposed for injection)
     "CostEngine",
     "CostQuery",
@@ -73,6 +76,9 @@ _EXPORTS = {
     "RequestState": "repro.serving",
     "InvalidRequestError": "repro.serving",
     "ServeReport": "repro.serving",
+    "FrontendConfig": "repro.serving",
+    "TokenStream": "repro.serving",
+    "HostTopology": "repro.serving",
     "CostEngine": "repro.core.costs",
     "CostQuery": "repro.core.costs",
     "Decision": "repro.core.costs",

@@ -12,6 +12,8 @@ CPU backend, an interpret-mode Pallas run, a different TPU generation.
   * host-sync latency          — device->host fetch of a tiny ready buffer
   * effective memory bandwidth — large-array copy traffic / wall time
   * matmul throughput          — FLOP/s at a well-tiled order, per dtype
+  * IPC round trip + bandwidth — ping-pong through a spawned echo child
+                                 (the serve_ipc front-end site's constants)
   * collective base latency    — tiny psum under a mesh (multi-device only)
   * interconnect bandwidth     — large psum, ring-model inverted to the
                                  per-link figure (multi-device only)
@@ -141,6 +143,60 @@ def _measure_prefix_lookup(reps: int = 20000, block_size: int = 16) -> float:
     return (time.perf_counter() - t0) / reps
 
 
+def _ipc_echo_child(conn) -> None:
+    """Echo server for the IPC probes (module-level: spawn-importable)."""
+    while True:
+        msg = conn.recv()
+        if msg is None:
+            return
+        conn.send(msg)
+
+
+_IPC_PROBE_CACHE: Optional[tuple] = None
+
+
+def _measure_ipc(small_reps: int = 200, large_reps: int = 5,
+                 large_bytes: int = 1 << 20) -> tuple:
+    """(round_trip_s, bytes_per_s) of parent<->child pipe messaging — the
+    two constants behind the serve_ipc cost site.  One spawned echo child
+    serves both probes: small-message ping-pong gives the per-message
+    round trip; the LARGE-payload round trip minus that base, divided into
+    the bytes moved (both directions), gives serialization + transport
+    bandwidth.  Spawn (not fork): the caller may hold live XLA threads.
+    Cached module-wide so the two ``attempt`` entries share one child."""
+    global _IPC_PROBE_CACHE
+    if _IPC_PROBE_CACHE is not None:
+        return _IPC_PROBE_CACHE
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    parent, child = ctx.Pipe()
+    proc = ctx.Process(target=_ipc_echo_child, args=(child,), daemon=True)
+    proc.start()
+    try:
+        def round_trip(payload):
+            parent.send(payload)
+            return parent.recv()
+
+        round_trip(b"x")  # warm-up / readiness barrier
+        rt = _timeit(lambda: round_trip(b"x"), small_reps)
+        blob = b"\0" * large_bytes
+        dt = _timeit(lambda: round_trip(blob), large_reps)
+        bw = 2.0 * large_bytes / max(dt - rt, 1e-9)
+        _IPC_PROBE_CACHE = (rt, bw)
+        return _IPC_PROBE_CACHE
+    finally:
+        try:
+            parent.send(None)
+        except OSError:
+            pass
+        proc.join(timeout=5.0)
+        if proc.is_alive():
+            proc.terminate()
+        parent.close()
+        child.close()
+
+
 def _measure_collective_base(reps: int = 20) -> Optional[float]:
     """Base latency of a tiny all-reduce; None on single-device backends."""
     import jax
@@ -221,6 +277,8 @@ def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
     attempt("kernel_launch_s", _measure_launch_latency)
     attempt("host_sync_s", _measure_host_sync)
     attempt("prefix_lookup_s", _measure_prefix_lookup)
+    attempt("ipc_round_trip_s", lambda: _measure_ipc()[0])
+    attempt("ipc_bytes_per_s", lambda: _measure_ipc()[1])
     attempt("hbm_bw", _measure_memory_bw)
     attempt("peak_flops_f32",
             lambda: _measure_matmul_flops(matmul_order, dtype="float32"))

@@ -46,7 +46,8 @@ class CostQuery:
     """Hashable description of one fork-join decision problem.
 
     ``kind``: matmul | sort | scan_chunk | moe_dispatch | layer_shard |
-    serve | serve_macro | serve_shard | serve_admit | serve_prefix.
+    serve | serve_macro | serve_shard | serve_admit | serve_prefix |
+    serve_ipc.
     ``shape``: the problem dims that kind cares about (documented per
     ``CostEngine._solve_*``).  ``params``: extra kwargs, sorted for hashing.
     """
@@ -472,6 +473,69 @@ class CostEngine:
                         baseline=baseline, alternatives=(reuse, baseline),
                         value=hit if use else 0)
 
+    def _solve_serve_ipc(self, q: CostQuery) -> Decision:
+        """Front-end IPC sizing — the eleventh decision site
+        (site=serve_ipc ledger rows).  ``op`` selects:
+
+        * ``workers`` — shape=(n_requests,); choose the intake worker
+          count.  Candidates are ``serve_ipc_workers_cost`` pipelines
+          (parent serialization vs slowest worker, plus a per-worker queue
+          management tax); baseline = ``inline``, validating every request
+          on the engine thread (no IPC at all).  ``override='frontend'``
+          pins a worker verdict (the user asked for a front end) and
+          ``override='inline'`` pins the baseline — both still price the
+          full sweep, same idiom as serve_shard/serve_prefix.
+        * ``coalesce`` — shape=(n_streams,); choose how many token events
+          ride one emission IPC message.  Candidates amortize the queue
+          round trip + message header against per-token delivery staleness
+          at the predicted decode interval (``serve_ipc_coalesce_cost``);
+          baseline = flush-every-event (coalesce 1).
+
+        The front end attaches measured per-message round trips (startup
+        pings) and per-burst emission times to these rows.
+        """
+        op = q.param("op")
+        if op == "workers":
+            (n_requests,) = q.shape
+            msg_bytes = float(q.param("msg_bytes", 0.0))
+            validate_s = float(q.param("validate_us", 0)) * 1e-6
+            inline = CostBreakdown(
+                "inline", max(n_requests, 1) * validate_s, 0.0, 0.0, 0.0)
+            cands = [inline]
+            for w in q.param("candidates", (1, 2, 4)):
+                cands.append(self.model.serve_ipc_workers_cost(
+                    n_requests, int(w), msg_bytes=msg_bytes,
+                    validate_s=validate_s))
+            override = q.param("override", None)
+            if override == "frontend":
+                best = min(cands[1:], key=lambda cb: cb.total)
+            elif override == "inline":
+                best = inline
+            else:
+                best = min(cands, key=lambda cb: cb.total)
+            value = 0 if best.strategy == "inline" else \
+                int(best.strategy.split("_w")[1])
+            return Decision(q, best.strategy, best, baseline=inline,
+                            alternatives=tuple(cands), value=value)
+        if op == "coalesce":
+            event_bytes = float(q.param("event_bytes", 0.0))
+            interval_s = float(q.param("token_interval_us", 0)) * 1e-6
+            seen, cands = set(), []
+            for c in q.param("candidates", (1, 2, 4, 8, 16)):
+                c = max(1, int(c))
+                if c in seen:
+                    continue
+                seen.add(c)
+                cands.append(self.model.serve_ipc_coalesce_cost(
+                    c, event_bytes=event_bytes, token_interval_s=interval_s))
+            baseline = next((cb for cb in cands if cb.strategy == "ipc_c1"),
+                            cands[0])
+            best = min(cands, key=lambda cb: cb.total)
+            return Decision(q, best.strategy, best, baseline=baseline,
+                            alternatives=tuple(cands),
+                            value=int(best.strategy.split("_c")[1]))
+        raise ValueError(f"unknown serve_ipc op: {op!r}")
+
     # ------------------------------------------------------------------
     # Convenience wrappers (the decision sites)
     # ------------------------------------------------------------------
@@ -619,6 +683,33 @@ class CostEngine:
             weight_bytes=int(weight_bytes),
             kv_bytes_per_token=int(kv_bytes_per_token),
             override=override))
+
+    def decide_serve_ipc_workers(self, n_requests: int, *, msg_bytes: float,
+                                 validate_us: int = 0,
+                                 candidates: Sequence[int] = (1, 2, 4),
+                                 override: Optional[str] = None,
+                                 record: bool = True) -> Decision:
+        """Intake worker count for one serve run.  ``value`` is the worker
+        count (0 = inline on the engine thread).  ``validate_us`` arrives
+        pre-quantized (scheduler ``_quantize_us``) to bound the cache."""
+        return self.query(CostQuery.make(
+            "serve_ipc", (max(int(n_requests), 1),), op="workers",
+            msg_bytes=int(msg_bytes), validate_us=int(validate_us),
+            candidates=tuple(int(c) for c in candidates),
+            override=override), record=record)
+
+    def decide_serve_ipc_coalesce(self, n_streams: int, *, event_bytes: float,
+                                  token_interval_us: int = 0,
+                                  candidates: Sequence[int] = (1, 2, 4, 8, 16),
+                                  record: bool = True) -> Decision:
+        """Emission coalescing factor (token events per IPC message).
+        ``value`` is the chosen burst size; ``token_interval_us`` is the
+        predicted decode-step interval, pre-quantized."""
+        return self.query(CostQuery.make(
+            "serve_ipc", (max(int(n_streams), 1),), op="coalesce",
+            event_bytes=int(event_bytes),
+            token_interval_us=int(token_interval_us),
+            candidates=tuple(int(c) for c in candidates)), record=record)
 
     # ------------------------------------------------------------------
     # Crossover solvers (delegate to the analytic model on this hw)

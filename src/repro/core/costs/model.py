@@ -437,6 +437,62 @@ class OverheadModel:
         return CostBreakdown(
             f"prefix_h{hit_tokens}", total, 0.0, 0.0, cow_s + lookup_s)
 
+    def serve_ipc_workers_cost(self, n_requests: int, workers: int, *,
+                               msg_bytes: float,
+                               validate_s: float = 0.0) -> CostBreakdown:
+        """Intake cost of routing ``n_requests`` submissions through
+        ``workers`` pinned worker processes (the serve_ipc site, worker-
+        count op).
+
+        The parent and the workers run CONCURRENTLY, so the breakdown
+        reuses the compute/memory overlap semantics: ``compute`` holds the
+        parent's serial share (it serializes every submission and verdict
+        and pays half the queue round trip each), ``memory`` holds the
+        slowest worker's share (deserialize + validate + reply for its
+        ``ceil(R/w)`` requests), and ``total = max(parent, worker)`` is the
+        pipeline bottleneck.  ``fixed`` charges one round trip per worker
+        for queue management — the term that stops "more workers" from
+        being free (the paper's thread-creation overhead, process-grade).
+
+        With one worker this degenerates to the serialized front end; the
+        in-process baseline (workers=0 at the call site) is simply
+        ``n_requests * validate_s`` on the engine thread, which the
+        scheduler prices as the site's baseline.
+        """
+        r = max(int(n_requests), 1)
+        w = max(int(workers), 1)
+        rt = self.hw.ipc_round_trip_s
+        bw = self.hw.ipc_bytes_per_s
+        per_msg = 2.0 * msg_bytes / bw  # submission out + verdict back
+        parent = r * (rt / 2 + per_msg)
+        worker = math.ceil(r / w) * (rt / 2 + per_msg + validate_s)
+        return CostBreakdown(f"ipc_w{w}", parent, worker, 0.0, w * rt)
+
+    def serve_ipc_coalesce_cost(self, coalesce: int, *,
+                                event_bytes: float,
+                                header_bytes: float = 64.0,
+                                token_interval_s: float = 0.0
+                                ) -> CostBreakdown:
+        """Per-streamed-token cost of emitting token events to the emission
+        worker in bursts of ``coalesce`` events per IPC message (the
+        serve_ipc site, coalescing op).
+
+        Amortized transport (``compute``): one queue round trip plus the
+        serialized header is shared by the whole burst, so bigger bursts
+        cost less per token.  Staleness (``fixed``): a token waits on
+        average ``(c - 1) / 2`` further tokens before its burst flushes, at
+        ``token_interval_s`` (the predicted decode-step interval) each —
+        the latency side of the batching tradeoff, same shape as the
+        macro-horizon site's raggedness term.  ``coalesce=1`` is the
+        immediate-flush baseline.
+        """
+        c = max(int(coalesce), 1)
+        rt = self.hw.ipc_round_trip_s
+        bw = self.hw.ipc_bytes_per_s
+        transport = (rt + (header_bytes + c * event_bytes) / bw) / c
+        staleness = (c - 1) / 2.0 * max(token_interval_s, 0.0)
+        return CostBreakdown(f"ipc_c{c}", transport, 0.0, 0.0, staleness)
+
     # ------------------------------------------------------------------
     # MoE dispatch strategy (EP overhead management)
     # ------------------------------------------------------------------

@@ -37,6 +37,12 @@ class HardwareSpec:
     collective_base_s: float = 1e-5  # per collective setup/sync latency
     host_sync_s: float = 5e-6  # per device->host round trip (fetch + bookkeeping)
     prefix_lookup_s: float = 1e-7  # per-block radix-trie lookup/pin (host side)
+    # Host IPC (serving front end: parent <-> pinned worker processes).
+    # Round trip = enqueue + wake + dequeue + reply through a bounded
+    # multiprocessing queue; bandwidth = pickle serialization + pipe
+    # transit for message payloads.  Both feed the serve_ipc cost site.
+    ipc_round_trip_s: float = 50e-6  # per-message queue round trip
+    ipc_bytes_per_s: float = 1e9  # serialization + transport bandwidth
     # MXU tiling
     mxu_dim: int = 128  # systolic array native tile
     lane_dim: int = 128  # VPU lane count

@@ -101,6 +101,20 @@ def main(argv=None):
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="length of the shared prefix in tokens "
                          "(0 < prefix_len < prompt_len)")
+    ap.add_argument("--workers", default=None,
+                    help="multi-process front end: 'auto' asks the "
+                         "serve_ipc CostQuery (may decide inline), an int "
+                         "pins that many intake workers (continuous engine "
+                         "only)")
+    ap.add_argument("--pin", action="store_true",
+                    help="pin the engine thread to a reserved physical "
+                         "core and the front-end workers to the remaining "
+                         "cores (degrades gracefully without "
+                         "sched_setaffinity)")
+    ap.add_argument("--stream", action="store_true",
+                    help="per-request incremental token streams at "
+                         "macro-step boundaries (default on when --workers "
+                         "is set); prints TTFT from the stream stamps")
     args = ap.parse_args(argv)
 
     # fail-fast flag validation (mirrors Runtime.serve, but at the CLI
@@ -131,6 +145,23 @@ def main(argv=None):
         if not 0 < args.prefix_len < args.prompt_len:
             ap.error(f"--prefix-len must be in (0, prompt_len="
                      f"{args.prompt_len}), got {args.prefix_len}")
+    frontend = None
+    if args.workers is not None:
+        if args.engine != "continuous":
+            ap.error("--workers needs --engine continuous (the front end "
+                     "feeds the continuous engine's request lifecycle)")
+        if args.workers == "auto":
+            frontend = "auto"
+        else:
+            try:
+                frontend = int(args.workers)
+            except ValueError:
+                ap.error(f"--workers must be 'auto' or an int, "
+                         f"got {args.workers!r}")
+            if frontend < 1:
+                ap.error(f"--workers must be >= 1, got {frontend}")
+    if (args.pin or args.stream) and args.engine == "static":
+        ap.error("--pin/--stream need --engine continuous")
 
     mesh_shape = None
     if args.mesh is not None:
@@ -176,7 +207,11 @@ def main(argv=None):
                  queue_limit=args.queue_limit, deadline_ms=args.deadline_ms,
                  inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms,
                  paged=args.paged and mode == "continuous",
-                 block_size=args.block_size, prefix_cache=prefix_cache)
+                 block_size=args.block_size, prefix_cache=prefix_cache,
+                 frontend=frontend if mode == "continuous" else None,
+                 pin=args.pin,
+                 stream=(True if args.stream and mode == "continuous"
+                         else "auto"))
         for mode in modes
     ]
 
@@ -203,6 +238,17 @@ def main(argv=None):
                 print(f"    mesh {res.report.mesh_shape} "
                       f"({res.report.device_count} devices), "
                       f"collective ops {res.report.collective_ops}")
+            if res.report.frontend_workers:
+                print(f"    frontend: {res.report.frontend_workers} intake "
+                      f"workers, IPC {res.report.ipc_messages} msgs / "
+                      f"{res.report.ipc_bytes} B, streamed "
+                      f"{res.report.streamed_tokens} tokens in "
+                      f"{res.report.stream_events} bursts")
+            if res.stream is not None:
+                ttft = res.report.ttft_percentiles()
+                print(f"    stream TTFT p50 {ms(ttft['ttft_p50'])} "
+                      f"p95 {ms(ttft['ttft_p95'])} "
+                      f"p99 {ms(ttft['ttft_p99'])}")
             states = res.report.state_counts()
             extras = "".join(
                 f", {k} {v}" for k, v in (
@@ -221,7 +267,7 @@ def main(argv=None):
 
     serve_rows = [e for e in rt.ledger.entries
                   if e.site in ("serve", "serve_macro", "serve_shard",
-                                "serve_admit", "serve_prefix")]
+                                "serve_admit", "serve_prefix", "serve_ipc")]
     measured = [e for e in serve_rows if e.measured_s is not None]
     print(f"serve ledger: {len(serve_rows)} decisions, "
           f"{len(measured)} with measured wall time")
@@ -231,6 +277,7 @@ def main(argv=None):
                                 "serve_shard": "serve_shard",
                                 "serve_admit": "serve_admit",
                                 "serve_prefix": "serve_prefix",
+                                "serve_ipc": "serve_ipc",
                                 }.get(e.site, "?"))
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
         print(f"    {op:14s} {e.choice:14s} "

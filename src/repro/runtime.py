@@ -128,6 +128,8 @@ class ServeResult:
     outputs: Dict[str, np.ndarray]  # rid -> generated tokens
     report: Any = None  # serving.ServeReport (continuous mode)
     engine: Any = None  # the serve engine, reusable for follow-up traces
+    stream: Any = None  # serving.frontend TokenStream (when streaming)
+    texts: Optional[Dict[str, str]] = None  # rid -> detok text (frontend)
 
 
 def synthetic_trace(n_requests: int, *, prompt_len: int, max_new: int,
@@ -342,6 +344,7 @@ class Runtime:
               watchdog_ms: Optional[float] = None, max_retries: int = 2,
               paged: bool = False, block_size: int = 16,
               kv_blocks: Optional[int] = None, prefix_cache="auto",
+              frontend=None, stream="auto", pin: bool = False,
               now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
@@ -377,6 +380,24 @@ class Runtime:
         (``'auto'`` = the serve_prefix CostQuery decides per prompt,
         ``'force'`` pins reuse on, ``False`` disables the trie).
 
+        Front end + streaming (continuous mode only; DESIGN.md §9):
+        ``frontend`` moves request intake (validation + pre-processing)
+        and token emission (detokenization) into pinned worker PROCESSES
+        off the engine thread.  ``frontend='auto'`` lets the ``serve_ipc``
+        CostQuery (the eleventh decision site) choose between inline
+        intake and 1/2/4 workers; an int pins the worker count (still
+        priced + ledgered); a ``FrontendConfig`` pins every knob.  ``pin``
+        requests topology-aware CPU affinity (engine thread on a reserved
+        physical core, workers round-robin over the rest; hosts without
+        ``sched_setaffinity`` degrade gracefully).  ``stream`` attaches a
+        per-request incremental token stream published at macro-step
+        boundaries from host mirrors the engine already syncs — zero
+        additional device syncs ('auto' = on exactly when a frontend is
+        on; a ``TokenStream`` instance is used as-is).  Token generation
+        never leaves the engine process, so frontend output is
+        token-identical by construction — and cross-checked against the
+        emission worker's transcript at drain.
+
         ``static`` is the lockstep baseline: the batch forms at the last
         arrival and every request's latency includes that wait; it requires
         equal-length prompts.  ``params=None`` initializes fresh parameters
@@ -389,6 +410,11 @@ class Runtime:
         from repro.serving import ContinuousServeEngine, ServeEngine
         from repro.serving.engine import emitted_count
         from repro.serving.faults import FaultInjector, FaultSpec
+        from repro.serving.frontend import (FrontendConfig, FrontendError,
+                                            ServingFrontend, StreamBroken,
+                                            TokenStream)
+        from repro.serving.frontend.workers import _pickled_size
+        from repro.serving.scheduler import RequestState
 
         if not trace:
             raise ValueError("serve() needs a non-empty trace of Requests")
@@ -423,6 +449,24 @@ class Runtime:
             raise ValueError(
                 "paged KV needs the slot pool of mode='continuous'; the "
                 "static lockstep baseline keeps dense per-row caches")
+        if mode == "static" and frontend is not None:
+            raise ValueError(
+                "the multi-process front end feeds the continuous engine's "
+                "request lifecycle; mode='static' has no admission to take "
+                "off the engine thread")
+        if mode == "static" and stream not in ("auto", False, None):
+            raise ValueError(
+                "token streaming needs the macro-step boundaries of "
+                "mode='continuous'; the static baseline emits one matrix")
+        if frontend is not None and not (
+                frontend == "auto" or isinstance(frontend, int)
+                or isinstance(frontend, FrontendConfig)):
+            raise ValueError(
+                f"frontend must be None, 'auto', an int worker count or a "
+                f"FrontendConfig, got {frontend!r}")
+        if isinstance(frontend, int) and frontend < 1:
+            raise ValueError(f"frontend worker count must be >= 1, "
+                             f"got {frontend}")
         if paged and block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         mesh = None
@@ -524,12 +568,135 @@ class Runtime:
             engine.watchdog_s = (None if watchdog_ms is None
                                  else watchdog_ms / 1e3)
             engine.injector = injector
-            report = engine.run(trace, now_fn=now_fn)
+
+            # --- multi-process front end + token streaming (DESIGN.md §9)
+            # serve_ipc decisions (workers / coalesce) are made here, at
+            # the deployment layer that owns the processes; the engine only
+            # ever sees a TokenStream.
+            fe = None
+            fe_cfg = None
+            dec_w = dec_c = None
+            run_trace = list(trace)
+            failed_intake: List[Any] = []
+            if frontend is not None:
+                submissions = [{
+                    "rid": r.rid,
+                    "prompt": [int(t) for t in np.asarray(r.prompt).tolist()],
+                    "max_new_tokens": int(r.max_new_tokens),
+                    "arrival_s": float(r.arrival_s),
+                    "priority": int(r.priority),
+                    "deadline_s": r.deadline_s,
+                    "ttft_deadline_s": r.ttft_deadline_s,
+                } for r in trace]
+                msg_bytes = max(_pickled_size(("req", s))
+                                for s in submissions)
+                plen = max(r.prompt_len for r in trace)
+                if isinstance(frontend, FrontendConfig):
+                    fe_cfg = frontend
+                    _, dec_w = engine.scheduler.serve_ipc_workers(
+                        len(trace), msg_bytes=msg_bytes, prompt_len=plen,
+                        candidates=(fe_cfg.workers,), override="frontend")
+                else:
+                    w, dec_w = engine.scheduler.serve_ipc_workers(
+                        len(trace), msg_bytes=msg_bytes, prompt_len=plen,
+                        candidates=((1, 2, 4) if frontend == "auto"
+                                    else (int(frontend),)),
+                        override=(None if frontend == "auto"
+                                  else "frontend"))
+                    if w > 0:
+                        fe_cfg = FrontendConfig(workers=w, pin=pin)
+                    # an 'auto' inline verdict serves without a front end —
+                    # the ledgered decision IS the cost site doing its job
+            want_stream = (stream is True
+                           or isinstance(stream, TokenStream)
+                           or (stream == "auto" and fe_cfg is not None))
+            if fe_cfg is not None and want_stream:
+                event_bytes = _pickled_size((trace[0].rid, (0,), False, 0.0))
+                pinned = isinstance(frontend, FrontendConfig)
+                c, dec_c = engine.scheduler.serve_ipc_coalesce(
+                    slots, event_bytes=event_bytes,
+                    candidates=((fe_cfg.coalesce,) if pinned
+                                else (1, 2, 4, 8, 16)))
+                if not pinned:
+                    fe_cfg = dataclasses.replace(fe_cfg, coalesce=max(c, 1))
+
+            texts = None
+            stream_obj = None
+            try:
+                if fe_cfg is not None:
+                    fe = ServingFrontend(fe_cfg, max_len=max_len)
+                    fe.start()
+                    t_sub = time.perf_counter()
+                    _, failures = fe.submit(submissions)
+                    engine.scheduler.record_measured(
+                        dec_w, time.perf_counter() - t_sub,
+                        note=f"serve_ipc intake n={len(trace)} "
+                             f"workers={fe_cfg.workers} "
+                             f"pinned={fe.workers_pinned}")
+                    if failures:
+                        # intake shed these BEFORE the engine: invalid ->
+                        # typed REJECTED, worker death -> typed FAILED.
+                        # Both are terminal; the drain invariant holds.
+                        run_trace = []
+                        for r in trace:
+                            why = failures.get(r.rid)
+                            if why is None:
+                                run_trace.append(r)
+                                continue
+                            r.mark((RequestState.FAILED
+                                    if why.startswith("frontend:")
+                                    else RequestState.REJECTED),
+                                   0.0, reason=why)
+                            failed_intake.append(r)
+                if want_stream:
+                    if isinstance(stream, TokenStream):
+                        stream_obj = stream
+                    elif fe is not None:
+                        stream_obj = fe.stream()
+                    else:
+                        stream_obj = TokenStream()
+                    engine.stream = stream_obj
+
+                report = engine.run(run_trace, now_fn=now_fn)
+
+                if stream_obj is not None:
+                    stream_obj.close()  # flush any coalesced tail burst
+                if fe is not None:
+                    if stream_obj is not None:
+                        try:
+                            transcript = fe.finish()
+                        except StreamBroken:
+                            transcript = None  # engine already failed typed
+                        if transcript is not None:
+                            texts = {rid: rec["text"]
+                                     for rid, rec in transcript.items()}
+                            for r in run_trace:
+                                rec = transcript.get(r.rid)
+                                if rec is not None and rec["tokens"] != [
+                                        int(t) for t in r.tokens]:
+                                    raise FrontendError(
+                                        f"emission transcript diverged from "
+                                        f"engine for {r.rid!r} — token "
+                                        f"identity violated")
+                    if dec_c is not None and fe.ping_round_trips_s:
+                        engine.scheduler.record_measured(
+                            dec_c, float(np.mean(fe.ping_round_trips_s)),
+                            note=f"serve_ipc coalesce={fe_cfg.coalesce} "
+                                 f"per-message ping round trip")
+                    report.ipc_messages = fe.ipc_messages
+                    report.ipc_bytes = fe.ipc_bytes
+                    report.frontend_workers = fe_cfg.workers
+                    report.requests.extend(failed_intake)
+            finally:
+                if fe is not None:
+                    fe.close()
+                engine.stream = None  # engine stays reusable stream-free
+
             pct = report.latency_percentiles()
             return ServeResult(
                 "continuous", report.wall_s, report.generated_tokens,
                 report.tok_per_s, pct["p50"], pct["p95"], report.outputs(),
-                report=report, engine=engine)
+                report=report, engine=engine, stream=stream_obj, texts=texts)
 
         raise ValueError(f"unknown serve mode: {mode!r}")
 

@@ -18,6 +18,11 @@ scheduler.py — Request lifecycle state machine + ServeScheduler (site=serve
                deadline-aware load shedding, prefix-cache reuse)
 faults.py    — FaultSpec/FaultInjector (raise | nan | stall) + guarded_call
                (watchdog + bounded retry-with-backoff around device steps)
+frontend/    — multi-process serving front end (DESIGN.md §9): host CPU
+               topology discovery + SMT-aware affinity planning, pinned
+               intake/emission worker processes over bounded IPC queues
+               (the site=serve_ipc cost site), and per-request incremental
+               token streams published at macro-step boundaries
 """
 
 from repro.serving.engine import (  # noqa: F401
@@ -33,6 +38,16 @@ from repro.serving.faults import (  # noqa: F401
     InjectedFault,
     StepFailed,
     guarded_call,
+)
+from repro.serving.frontend import (  # noqa: F401
+    FrontendConfig,
+    FrontendError,
+    FrontendStream,
+    HostTopology,
+    ServingFrontend,
+    StreamBroken,
+    StreamEvent,
+    TokenStream,
 )
 from repro.serving.paging import (  # noqa: F401
     BlockPool,

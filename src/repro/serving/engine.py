@@ -52,6 +52,7 @@ from repro.serving.scheduler import (
     supports_chunked_prefill,
     validate_request,
 )
+from repro.serving.frontend.stream import StreamBroken, TokenStream
 from repro.serving.paging import default_kv_blocks
 from repro.serving.slots import SlotPool
 from repro.training.step import (
@@ -197,6 +198,14 @@ class ServeReport:
     prefix_hit_tokens: int = 0  # prompt tokens served from the radix cache
     prefilled_tokens: int = 0   # prompt tokens actually prefilled
     cow_count: int = 0          # copy-on-write page duplications
+    # streaming / front-end accounting (all zero without a token stream /
+    # multi-process front end).  IPC fields are filled by Runtime.serve
+    # from the ServingFrontend's counters — the engine never sees a queue.
+    streamed_tokens: int = 0    # tokens published to the attached stream
+    stream_events: int = 0      # publish calls (bursts) on the stream
+    ipc_messages: int = 0       # frontend queue messages (intake + emission)
+    ipc_bytes: int = 0          # pickled payload bytes through those queues
+    frontend_workers: int = 0   # intake worker processes (0 = in-process)
 
     def state_counts(self) -> Dict[str, int]:
         """How many requests ended in each lifecycle state."""
@@ -250,6 +259,16 @@ class ServeReport:
             return {f"p{q}": float("nan") for q in qs}
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
 
+    def ttft_percentiles(self, qs=(50, 95, 99)) -> Dict[str, float]:
+        """Time-to-first-token percentiles.  ``ttft_s`` is stamped when the
+        first token leaves the device boundary the engine already
+        synchronized on; with a stream attached that is exactly the moment
+        the token is published to the client."""
+        ttfts = [r.ttft_s for r in self.requests if r.ttft_s is not None]
+        if not ttfts:
+            return {f"ttft_p{q}": float("nan") for q in qs}
+        return {f"ttft_p{q}": float(np.percentile(ttfts, q)) for q in qs}
+
     def as_dict(self) -> dict:
         return {
             "wall_s": self.wall_s,
@@ -272,7 +291,13 @@ class ServeReport:
             "prefilled_tokens": self.prefilled_tokens,
             "prefix_hit_rate": self.prefix_hit_rate,
             "cow_count": self.cow_count,
+            "streamed_tokens": self.streamed_tokens,
+            "stream_events": self.stream_events,
+            "ipc_messages": self.ipc_messages,
+            "ipc_bytes": self.ipc_bytes,
+            "frontend_workers": self.frontend_workers,
             **self.latency_percentiles(),
+            **self.ttft_percentiles(),
             "requests": [
                 {
                     "rid": r.rid,
@@ -325,7 +350,8 @@ class ContinuousServeEngine:
                  injector: Optional[FaultInjector] = None,
                  paged: bool = False, block_size: int = 16,
                  kv_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 stream: Optional[TokenStream] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -386,6 +412,14 @@ class ContinuousServeEngine:
                              and self.paged and all_attn)
         self._prefix_override = ("use_prefix" if prefix_cache == "force"
                                  else None)
+        # --- incremental token stream (frontend or in-process).  The
+        # engine publishes at boundaries it ALREADY synchronized on
+        # (prefill return, macro-step return) — attaching a stream adds
+        # zero device syncs.  Assignable after construction so warmup can
+        # run stream-free (Runtime attaches it post-warmup).
+        self.stream = stream
+        self._stream_dead = False
+        self._stream_reason = ""
         self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
         # --- mesh placement: shard-vs-replicate is a CostQuery, not a flag
         if shard_params not in ("auto", "shard", "replicate"):
@@ -529,6 +563,20 @@ class ContinuousServeEngine:
             retries=self.max_retries, backoff_s=self.retry_backoff_s,
             on_retry=on_retry, on_watchdog=on_watchdog)
 
+    def _publish(self, req: Request, tokens, done: bool, t: float) -> None:
+        """Publish a request's newly-emitted tokens to the attached stream
+        (no-op without one).  A broken stream — the frontend's emission
+        worker died — flips ``_stream_dead``; ``run()`` converts that into
+        typed FAILED for everything in flight, because tokens that cannot
+        reach the client are not worth generating."""
+        if self.stream is None or self._stream_dead:
+            return
+        try:
+            self.stream.publish(req.rid, tokens, done=done, t=t)
+        except StreamBroken as e:
+            self._stream_dead = True
+            self._stream_reason = f"frontend stream broken: {e}"
+
     def _fail_inflight(self, reqs: List[Request], t: float,
                        reason: str) -> None:
         """Failure path: mark ``reqs`` FAILED and restore an empty, valid,
@@ -537,10 +585,64 @@ class ContinuousServeEngine:
         for r in reqs:
             if not r.state.terminal:
                 r.mark(RequestState.FAILED, t, reason=reason)
+                self._publish(r, (), done=True, t=t)
         self.pool.drain()
         self._last_tok[:] = self.pad_id
         self._budget[:] = 0
         self._last_macro_key = None
+
+    def _split_group(self, group: List[Request]):
+        """Within-group prefix sharing.  PR 8's radix lookups all run
+        BEFORE the group's single batched prefill, so same-group requests
+        were blind to each other's pages and a prompt prefix shared by two
+        group members prefilled once PER MEMBER.  This predicts that
+        overlap from the trie and SPLITS the group: a request whose
+        block-aligned shared prefix with an earlier KEPT member is not yet
+        resident is deferred to the next admission round, where the
+        donor's freshly-published pages turn the redundant prefill into an
+        ordinary radix hit.
+
+        Deferral only fires when the serve_prefix cost model says the
+        predicted hit would actually be APPLIED (the same pricing the
+        deferred request will face at its own admission) — at scales where
+        reuse loses, groups stay whole and admission is unchanged.
+        Progress is guaranteed: a member defers only to a donor kept in
+        the CURRENT group, so every round admits at least one request."""
+        bs = self.block_size
+        sch = self.scheduler
+        kept: List[Request] = []
+        kept_prompts: List[List[int]] = []
+        deferred: List[Request] = []
+        for r in group:
+            p = [int(t) for t in r.prompt] + [int(t) for t in r.tokens]
+            plen = len(p)
+            # same cap as lookup(): at most plen-1 prompt tokens can ever
+            # be served from cache, and only in full blocks
+            cap = ((plen - 1) // bs) * bs
+            shared = 0
+            for q in kept_prompts:
+                n = 0
+                for a, b in zip(p, q):
+                    if a != b:
+                        break
+                    n += 1
+                shared = max(shared, min((n // bs) * bs, cap))
+            if (shared >= bs and self.pool.blocks.resident_prefix_tokens(
+                    p[:shared]) < shared):
+                kw = dict(flops_per_token=sch.flops_per_token,
+                          weight_bytes=sch.weight_bytes, block_size=bs,
+                          kv_bytes_per_token=sch.kv_bytes_per_token,
+                          dtype_bytes=sch.dtype_bytes)
+                reuse = sch.engine.model.serve_prefix_cost(
+                    plen, shared, plen, **kw)
+                base = sch.engine.model.serve_prefix_cost(plen, 0, plen, **kw)
+                if (self._prefix_override == "use_prefix"
+                        or reuse.total <= base.total):
+                    deferred.append(r)
+                    continue
+            kept.append(r)
+            kept_prompts.append(p)
+        return kept, deferred
 
     def _admit_group(self, reqs: List[Request], now) -> None:
         """Admit a group of requests with ONE batched prefill lowered
@@ -674,10 +776,12 @@ class ContinuousServeEngine:
                 self.pool.release(s)
                 self._last_tok[s] = self.pad_id
                 self._budget[s] = 0
+                self._publish(r, (tk,), done=True, t=t_first)
             else:
                 r.mark(RequestState.DECODING, t_first)
                 self._last_tok[s] = tk
                 self._budget[s] = r.max_new_tokens - len(r.tokens)
+                self._publish(r, (tk,), done=False, t=t_first)
         self._peak_live_tokens = max(self._peak_live_tokens,
                                      int(self.pool.positions().sum()))
         if self.paged:
@@ -715,6 +819,12 @@ class ContinuousServeEngine:
         ret0, wd0 = self.step_retries, self.watchdog_fires
         hit0, pf0, cow0 = (self.prefix_hit_tokens, self.prefilled_tokens,
                            self.cow_count)
+        ev0 = tok0 = 0
+        if self.stream is not None:
+            ev0 = self.stream.published_events
+            tok0 = self.stream.published_tokens
+        self._stream_dead = False
+        self._stream_reason = ""
         self._peak_live_tokens = 0
         self._peak_blocks = 0
         # attach ONE measured wall time per run to the serve_shard row (the
@@ -748,6 +858,18 @@ class ContinuousServeEngine:
 
         try:
             while pending or waiting or active:
+                if self._stream_dead:
+                    # the frontend's emission worker died: tokens can no
+                    # longer reach the client, so generating more is waste.
+                    # Fail everything non-terminal (typed) and drain — the
+                    # invariant holds, every request still ends terminal.
+                    self._fail_inflight(
+                        [r for r in requests if not r.state.terminal],
+                        now(), reason=self._stream_reason)
+                    pending.clear()
+                    waiting.clear()
+                    active = {}
+                    break
                 # intake runs even when the pool is saturated, so bounded-
                 # queue backpressure and queued-deadline expiry act on
                 # arrival, not on the next free slot
@@ -784,6 +906,13 @@ class ContinuousServeEngine:
                         group.append(waiting.pop(0))
                     if not group:
                         continue  # everything at the head was shed
+                    if self.prefix_cache and len(group) > 1:
+                        group, deferred = self._split_group(group)
+                        if deferred:
+                            # back to the queue head: next admission round
+                            # the donor's pages are published and these
+                            # turn into radix hits
+                            waiting[0:0] = deferred
                     try:
                         self._admit_group(group, now)
                     except StepFailed as e:
@@ -824,14 +953,26 @@ class ContinuousServeEngine:
                     if waiting:
                         continue  # admission re-runs (sheds/admits)
                     if pending:
+                        # sleep STRAIGHT to the next arrival: with the pool
+                        # empty and nothing queued it is the only upcoming
+                        # event (queued deadlines apply to arrived requests
+                        # only), so the old fixed 50 ms poll was pure
+                        # wakeup overhead.  A 1 ms probe sleep first
+                        # distinguishes a real clock from a pinned test
+                        # clock, which advances by `offset` instead of
+                        # sleeping wall time.
                         wait = pending[0].arrival_s - now()
                         if wait > 0:
                             before = now()
-                            time.sleep(min(wait, 0.05))
+                            time.sleep(min(wait, 0.001))
                             if now() <= before:
                                 # pinned test clock: jump straight to the
                                 # next arrival instead of sleeping forever
                                 offset += wait
+                            else:
+                                rest = pending[0].arrival_s - now()
+                                if rest > 0:
+                                    time.sleep(rest)
                     continue
 
                 # --- one K-token macro-step over the pool ---
@@ -924,6 +1065,7 @@ class ContinuousServeEngine:
                         self._last_tok[slot] = self.pad_id
                         self._budget[slot] = 0
                         self._last_macro_key = None
+                        self._publish(req, (), done=True, t=t_emit)
                         del active[slot]
                         continue
                     n_before = len(req.tokens)
@@ -937,11 +1079,15 @@ class ContinuousServeEngine:
                             break
                     n_emitted = len(req.tokens) - n_before
                     self.pool.advance(slot, n_emitted)  # before release zeroes
+                    # the macro-step's one host sync already happened —
+                    # streaming this burst costs no extra device traffic
+                    burst = tuple(req.tokens[n_before:])
                     if finished:
                         req.mark(RequestState.COMPLETED, t_emit)
                         self.pool.release(slot)
                         self._last_tok[slot] = self.pad_id
                         self._budget[slot] = 0
+                        self._publish(req, burst, done=True, t=t_emit)
                         del active[slot]
                     elif (any_deadlines and req.deadline_s is not None
                           and t_emit - req.arrival_s > req.deadline_s):
@@ -954,10 +1100,12 @@ class ContinuousServeEngine:
                         self._last_tok[slot] = self.pad_id
                         self._budget[slot] = 0
                         self._last_macro_key = None
+                        self._publish(req, burst, done=True, t=t_emit)
                         del active[slot]
                     else:
                         self._last_tok[slot] = int(em[slot, horizon - 1])
                         self._budget[slot] -= n_emitted
+                        self._publish(req, burst, done=False, t=t_emit)
         except BaseException:
             # abort safety net (fatal faults, KeyboardInterrupt, bugs):
             # leave the ENGINE reusable — in-flight requests FAILED, pool
@@ -985,7 +1133,11 @@ class ContinuousServeEngine:
             reserved_blocks=self._peak_blocks,
             prefix_hit_tokens=self.prefix_hit_tokens - hit0,
             prefilled_tokens=self.prefilled_tokens - pf0,
-            cow_count=self.cow_count - cow0)
+            cow_count=self.cow_count - cow0,
+            streamed_tokens=(self.stream.published_tokens - tok0
+                             if self.stream is not None else 0),
+            stream_events=(self.stream.published_events - ev0
+                           if self.stream is not None else 0))
 
     def warmup(self, prompt_len: int, max_new_tokens: int = 2) -> None:
         """Compile the prefill/decode/reset executables outside any timed

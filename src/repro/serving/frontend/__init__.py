@@ -1,0 +1,45 @@
+"""Topology-aware multi-process serving front end.
+
+    topology.py   host CPU discovery (sysfs / lscpu / flat fallback) and
+                  SMT/NUMA-aware affinity planning — one physical core
+                  reserved for the engine thread
+    workers.py    pinned intake (validate + pre-process) and emission
+                  (stream assembly + detok) worker processes over bounded
+                  IPC queues; crash => typed FAILED, drain preserved
+    stream.py     per-request incremental token streams published at
+                  macro-step boundaries (zero added device syncs), TTFT
+                  stamped at the first streamed token
+
+Worker count and message coalescing are priced by the ``serve_ipc``
+calibrated cost site (the eleventh), ledgered predicted-vs-measured.
+"""
+
+from repro.serving.frontend.stream import (StreamBroken, StreamEvent,
+                                           TokenStream)
+from repro.serving.frontend.topology import (AffinityPlan, HostTopology,
+                                             LogicalCPU, apply_affinity,
+                                             discover, flat_topology,
+                                             from_lscpu, from_sysfs,
+                                             parse_cpu_list, plan_affinity)
+from repro.serving.frontend.workers import (FrontendConfig, FrontendError,
+                                            FrontendStream, ServingFrontend)
+
+__all__ = [
+    "AffinityPlan",
+    "FrontendConfig",
+    "FrontendError",
+    "FrontendStream",
+    "HostTopology",
+    "LogicalCPU",
+    "ServingFrontend",
+    "StreamBroken",
+    "StreamEvent",
+    "TokenStream",
+    "apply_affinity",
+    "discover",
+    "flat_topology",
+    "from_lscpu",
+    "from_sysfs",
+    "parse_cpu_list",
+    "plan_affinity",
+]

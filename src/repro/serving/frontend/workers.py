@@ -1,0 +1,478 @@
+"""Multi-process serving front end: pinned intake + emission workers.
+
+Process layout (one deployment)::
+
+    parent (engine thread, pinned to its reserved physical core)
+      ├── intake worker 0..N-1   validate + pre-process submissions
+      │     in:  per-worker bounded Queue   (round-robin from parent)
+      │     out: shared bounded Queue       (validated payloads / errors)
+      └── emission worker        coalesced token bursts -> detok streams
+            in:  bounded Queue  (parent flushes at macro boundaries)
+            out: result Queue   (final per-request transcript at drain)
+
+Everything crosses process boundaries through BOUNDED ``multiprocessing``
+queues: a full queue blocks the producer, so front-end backpressure
+composes with the engine's admission ``queue_limit`` — the parent never
+buffers unboundedly on behalf of a slow worker.  Workers are spawned (not
+forked): the parent holds live JAX/XLA threads, and the workers only ever
+import stdlib + the topology module, so spawn keeps them light and safe.
+
+Failure semantics (composing with the PR 7 lifecycle): a dead intake
+worker turns the submissions routed to it into typed FAILED requests
+before they reach the engine; a dead emission worker raises
+:class:`~repro.serving.frontend.stream.StreamBroken` out of
+``FrontendStream.publish``, which the engine converts into typed FAILED
+for every in-flight request — the drain invariant (every request reaches
+a terminal state, every slot/page returns to the pool) is preserved in
+both cases.
+
+Token generation itself never leaves the engine process, so front-end
+output is token-identical to the in-process engine by construction; the
+emission worker re-assembles per-request streams and the parent
+cross-checks them against the engine's transcript at ``finish()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import queue as _queue
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.frontend import topology as topo_mod
+from repro.serving.frontend.stream import StreamBroken, TokenStream
+
+_JOIN_TIMEOUT_S = 5.0
+_RESULT_TIMEOUT_S = 60.0
+
+
+class FrontendError(RuntimeError):
+    """Front-end infrastructure failure (worker death, protocol breach)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Deployment knobs for :class:`ServingFrontend`.
+
+    ``workers``/``coalesce`` arrive here already resolved to ints — the
+    ``serve_ipc`` cost site (Runtime layer) owns the "auto" choice.
+    ``queue_depth`` bounds every IPC queue (backpressure, not buffering).
+    ``pin`` requests affinity masks from :mod:`.topology`; hosts where
+    ``sched_setaffinity`` is unavailable degrade to unpinned workers.
+    """
+
+    workers: int = 2
+    coalesce: int = 1
+    pin: bool = False
+    queue_depth: int = 64
+
+    def __post_init__(self) -> None:
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.coalesce < 1:
+            raise ValueError(f"coalesce must be >= 1, got {self.coalesce}")
+        if self.queue_depth < 1:
+            raise ValueError(
+                f"queue_depth must be >= 1, got {self.queue_depth}")
+
+
+def _pickled_size(obj: Any) -> int:
+    try:
+        return len(pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL))
+    except Exception:
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Worker entry points (module-level: importable under a spawn context)
+# ---------------------------------------------------------------------------
+
+def _intake_main(wid: int, in_q, out_q, cpus: Optional[Sequence[int]],
+                 max_len: int) -> None:
+    """Validate + pre-process submissions.  Messages:
+
+    in:  ("ping", t)                      -> out ("pong", wid, t)
+         ("req", payload_dict)           -> out ("ok", rid, payload)
+                                          | out ("invalid", rid, message)
+         None                            -> out ("bye", wid); exit
+    """
+    if cpus:
+        topo_mod.apply_affinity(cpus)
+    # heavier imports AFTER pinning so they run on the assigned core
+    from repro.serving.scheduler import (InvalidRequestError, Request,
+                                         validate_request)
+    while True:
+        msg = in_q.get()
+        if msg is None:
+            out_q.put(("bye", wid))
+            return
+        kind = msg[0]
+        if kind == "ping":
+            out_q.put(("pong", wid, msg[1]))
+            continue
+        payload = msg[1]
+        rid = payload.get("rid", "?")
+        try:
+            req = Request(
+                rid=str(rid),
+                prompt=[int(t) for t in payload["prompt"]],
+                max_new_tokens=int(payload["max_new_tokens"]),
+                arrival_s=float(payload.get("arrival_s", 0.0)),
+                priority=int(payload.get("priority", 0)),
+                deadline_s=payload.get("deadline_s"),
+                ttft_deadline_s=payload.get("ttft_deadline_s"),
+            )
+            validate_request(req, max_len=max_len)
+        except InvalidRequestError as e:
+            out_q.put(("invalid", rid, str(e)))
+            continue
+        except Exception as e:  # malformed payload: typed, not fatal
+            out_q.put(("invalid", rid, f"malformed submission: {e}"))
+            continue
+        out_q.put(("ok", rid, {
+            "prompt": req.prompt,
+            "prompt_len": req.prompt_len,
+            "max_new_tokens": req.max_new_tokens,
+            "arrival_s": req.arrival_s,
+            "priority": req.priority,
+            "deadline_s": req.deadline_s,
+            "ttft_deadline_s": req.ttft_deadline_s,
+            "intake_worker": wid,
+        }))
+
+
+def _detok(tokens: Sequence[int]) -> str:
+    """Stand-in detokenizer: the repo serves raw token ids (no vocab file),
+    so "text" is the canonical space-joined id rendering."""
+    return " ".join(str(int(t)) for t in tokens)
+
+
+def _emission_main(in_q, out_q, cpus: Optional[Sequence[int]]) -> None:
+    """Assemble per-request streams and detokenize off the engine thread.
+
+    in:  ("ping", t)                          -> out ("pong", -1, t)
+         ("emit", [(rid, tokens, done, t), ...])   coalesced event burst
+         None -> out ("result", transcript); exit
+
+    transcript: rid -> {"tokens": [...], "text": str, "events": int,
+                        "first_t": float | None, "done": bool}
+    """
+    if cpus:
+        topo_mod.apply_affinity(cpus)
+    transcript: Dict[str, Dict[str, Any]] = {}
+    while True:
+        msg = in_q.get()
+        if msg is None:
+            for rec in transcript.values():
+                rec["text"] = _detok(rec["tokens"])
+            out_q.put(("result", transcript))
+            return
+        kind = msg[0]
+        if kind == "ping":
+            out_q.put(("pong", -1, msg[1]))
+            continue
+        for rid, tokens, done, t in msg[1]:
+            rec = transcript.setdefault(
+                rid, {"tokens": [], "text": "", "events": 0,
+                      "first_t": None, "done": False})
+            rec["tokens"].extend(int(x) for x in tokens)
+            rec["events"] += 1
+            if tokens and rec["first_t"] is None:
+                rec["first_t"] = t
+            if done:
+                rec["done"] = True
+
+
+# ---------------------------------------------------------------------------
+# Parent-side deployment
+# ---------------------------------------------------------------------------
+
+class FrontendStream(TokenStream):
+    """TokenStream that forwards every publish to the emission worker,
+    coalescing ``coalesce`` events per IPC message.  The engine calls
+    ``publish`` at macro boundaries; a dead emission worker surfaces as
+    :class:`StreamBroken` (the engine then fails in-flight typed)."""
+
+    def __init__(self, frontend: "ServingFrontend", coalesce: int) -> None:
+        super().__init__()
+        self._fe = frontend
+        self._coalesce = max(1, int(coalesce))
+        self._buf: List[Tuple[str, Tuple[int, ...], bool, float]] = []
+
+    def publish(self, rid: str, tokens: Sequence[int], done: bool,
+                t: float) -> None:
+        if self._done.get(rid):
+            return
+        super().publish(rid, tokens, done, t)
+        self._buf.append((rid, tuple(int(x) for x in tokens), bool(done),
+                          float(t)))
+        # terminal events flush eagerly so downstream consumers see request
+        # completion without waiting for the coalescing window to fill
+        if done or len(self._buf) >= self._coalesce:
+            self.flush()
+
+    def flush(self) -> None:
+        if self._buf:
+            burst, self._buf = self._buf, []
+            self._fe._emit_burst(burst)
+
+    def close(self) -> None:
+        self.flush()
+
+
+class ServingFrontend:
+    """Owns the worker processes, queues, affinity plan, and IPC accounting
+    for one serve run.  Lifecycle::
+
+        fe = ServingFrontend(cfg, max_len=...)
+        fe.start()
+        payloads, failures = fe.submit(submissions)   # intake workers
+        stream = fe.stream()                          # -> engine
+        ... engine.run(...) publishes into stream ...
+        transcript = fe.finish()                      # emission transcript
+        fe.close()
+    """
+
+    def __init__(self, config: FrontendConfig, *, max_len: int,
+                 topology: Optional[topo_mod.HostTopology] = None) -> None:
+        self.config = config
+        self.max_len = int(max_len)
+        self.topology = topology
+        self.plan: Optional[topo_mod.AffinityPlan] = None
+        self.engine_pinned = False
+        self.workers_pinned = 0
+        self.ipc_messages = 0
+        self.ipc_bytes = 0
+        self.ping_round_trips_s: List[float] = []
+        self._ctx = None
+        self._intake_procs: List[Any] = []
+        self._intake_qs: List[Any] = []
+        self._intake_out = None
+        self._emit_q = None
+        self._emit_out = None
+        self._emit_proc = None
+        self._started = False
+        self._rr = 0
+
+    # ----------------------------------------------------------- startup --
+    def start(self) -> None:
+        import multiprocessing as mp
+        if self._started:
+            raise FrontendError("frontend already started")
+        cfg = self.config
+        if self.topology is None:
+            self.topology = topo_mod.discover()
+        worker_cpus: List[Optional[Sequence[int]]] = [None] * (cfg.workers + 1)
+        if cfg.pin:
+            # +1 planned mask: the emission worker is a worker too
+            self.plan = topo_mod.plan_affinity(self.topology, cfg.workers + 1)
+            self.engine_pinned = topo_mod.apply_affinity(
+                sorted(self.plan.engine_cpus))
+            worker_cpus = [sorted(m) for m in self.plan.worker_cpus]
+        self._ctx = mp.get_context("spawn")
+        self._intake_out = self._ctx.Queue(maxsize=cfg.queue_depth)
+        for wid in range(cfg.workers):
+            q = self._ctx.Queue(maxsize=cfg.queue_depth)
+            p = self._ctx.Process(
+                target=_intake_main,
+                args=(wid, q, self._intake_out, worker_cpus[wid],
+                      self.max_len),
+                daemon=True, name=f"repro-intake-{wid}")
+            p.start()
+            self._intake_qs.append(q)
+            self._intake_procs.append(p)
+        self._emit_q = self._ctx.Queue(maxsize=cfg.queue_depth)
+        self._emit_out = self._ctx.Queue(maxsize=cfg.queue_depth)
+        self._emit_proc = self._ctx.Process(
+            target=_emission_main,
+            args=(self._emit_q, self._emit_out, worker_cpus[cfg.workers]),
+            daemon=True, name="repro-emission")
+        self._emit_proc.start()
+        self._started = True
+        self._ping_all()
+
+    def _ping_all(self) -> None:
+        """Readiness barrier + measured per-message IPC round trips (the
+        measured side of the ``serve_ipc`` ledger rows).  Each worker is
+        pinged TWICE: the first round trip absorbs spawn/import startup
+        (hundreds of ms) and is discarded; only the second — a steady-state
+        queue round trip — is recorded."""
+        pairs = [(q, self._intake_out, self._intake_procs[wid])
+                 for wid, q in enumerate(self._intake_qs)]
+        pairs.append((self._emit_q, self._emit_out, self._emit_proc))
+        for in_q, out_q, proc in pairs:
+            for warm in (True, False):
+                t0 = time.perf_counter()
+                in_q.put(("ping", t0))
+                self._expect_pong(out_q, proc)
+                if not warm:
+                    self.ping_round_trips_s.append(time.perf_counter() - t0)
+
+    def _expect_pong(self, out_q, proc) -> None:
+        deadline = time.monotonic() + _RESULT_TIMEOUT_S
+        while True:
+            try:
+                msg = out_q.get(timeout=1.0)
+            except _queue.Empty:
+                if not proc.is_alive():
+                    raise FrontendError(
+                        f"worker {proc.name} died during startup "
+                        f"(exitcode {proc.exitcode})")
+                if time.monotonic() > deadline:
+                    raise FrontendError(
+                        f"worker {proc.name} unresponsive at startup")
+                continue
+            if msg[0] == "pong":
+                return
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, submissions: Sequence[Dict[str, Any]],
+               ) -> Tuple[Dict[str, Dict[str, Any]], Dict[str, str]]:
+        """Round-robin raw submissions over the intake workers; wait for
+        every verdict.  Returns ``(validated, failures)`` keyed by rid —
+        ``failures`` carries typed reasons for invalid submissions and for
+        submissions routed to a worker that died (those become FAILED, not
+        a crashed serve run)."""
+        if not self._started:
+            raise FrontendError("frontend not started")
+        routed: Dict[str, int] = {}
+        for sub in submissions:
+            wid = self._rr % len(self._intake_qs)
+            self._rr += 1
+            rid = str(sub.get("rid", "?"))
+            msg = ("req", sub)
+            if not self._intake_procs[wid].is_alive():
+                routed[rid] = -1  # dead on arrival: typed failure below
+                continue
+            try:
+                self._intake_qs[wid].put(msg, timeout=_RESULT_TIMEOUT_S)
+            except _queue.Full:
+                routed[rid] = -1
+                continue
+            self._count_msg(msg)
+            routed[rid] = wid
+        validated: Dict[str, Dict[str, Any]] = {}
+        failures: Dict[str, str] = {
+            rid: "frontend: intake worker unavailable"
+            for rid, wid in routed.items() if wid < 0}
+        pending = {rid for rid, wid in routed.items() if wid >= 0}
+        deadline = time.monotonic() + _RESULT_TIMEOUT_S
+        while pending:
+            try:
+                msg = self._intake_out.get(timeout=0.5)
+            except _queue.Empty:
+                dead = [rid for rid in pending
+                        if not self._intake_procs[routed[rid]].is_alive()]
+                for rid in dead:
+                    failures[rid] = "frontend: intake worker crashed"
+                    pending.discard(rid)
+                if time.monotonic() > deadline and pending:
+                    for rid in list(pending):
+                        failures[rid] = "frontend: intake timed out"
+                        pending.discard(rid)
+                continue
+            self._count_msg(msg)
+            if msg[0] == "ok":
+                _, rid, payload = msg
+                validated[str(rid)] = payload
+                pending.discard(str(rid))
+            elif msg[0] == "invalid":
+                _, rid, why = msg
+                failures[str(rid)] = why
+                pending.discard(str(rid))
+            # stray pongs from startup retries are ignored
+        return validated, failures
+
+    # ---------------------------------------------------------- emission --
+    def stream(self) -> FrontendStream:
+        return FrontendStream(self, self.config.coalesce)
+
+    def _emit_burst(self, burst) -> None:
+        if not self._started or self._emit_proc is None:
+            raise StreamBroken("frontend not started")
+        if not self._emit_proc.is_alive():
+            raise StreamBroken(
+                f"emission worker died (exitcode {self._emit_proc.exitcode})")
+        msg = ("emit", burst)
+        try:
+            self._emit_q.put(msg, timeout=_RESULT_TIMEOUT_S)
+        except _queue.Full:
+            raise StreamBroken("emission queue wedged (backpressure "
+                               "timeout with worker alive)") from None
+        self._count_msg(msg)
+
+    def finish(self) -> Dict[str, Dict[str, Any]]:
+        """Drain the emission worker: returns its per-request transcript
+        (tokens, detok text, event counts, first-burst times)."""
+        if self._emit_proc is None or not self._emit_proc.is_alive():
+            raise StreamBroken("emission worker is not running")
+        self._emit_q.put(None)
+        deadline = time.monotonic() + _RESULT_TIMEOUT_S
+        while True:
+            try:
+                msg = self._emit_out.get(timeout=1.0)
+            except _queue.Empty:
+                if time.monotonic() > deadline:
+                    raise StreamBroken(
+                        "emission worker did not return a transcript")
+                if not self._emit_proc.is_alive() \
+                        and self._emit_proc.exitcode not in (0, None):
+                    raise StreamBroken(
+                        f"emission worker died before transcript "
+                        f"(exitcode {self._emit_proc.exitcode})")
+                continue
+            if msg[0] == "result":
+                self._count_msg(msg)
+                self._emit_proc.join(timeout=_JOIN_TIMEOUT_S)
+                self._emit_proc = None
+                return msg[1]
+
+    # ----------------------------------------------------------- teardown --
+    def close(self) -> None:
+        """Stop every worker (idempotent; survives dead/wedged workers)."""
+        for q, p in zip(self._intake_qs, self._intake_procs):
+            if p.is_alive():
+                try:
+                    q.put(None, timeout=1.0)
+                except _queue.Full:
+                    pass
+        if self._emit_proc is not None and self._emit_proc.is_alive():
+            try:
+                self._emit_q.put(None, timeout=1.0)
+            except _queue.Full:
+                pass
+        procs = list(self._intake_procs)
+        if self._emit_proc is not None:
+            procs.append(self._emit_proc)
+        for p in procs:
+            p.join(timeout=_JOIN_TIMEOUT_S)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=_JOIN_TIMEOUT_S)
+        for q in (*self._intake_qs, self._intake_out, self._emit_q,
+                  self._emit_out):
+            if q is not None:
+                q.cancel_join_thread()
+                q.close()
+        self._intake_procs, self._intake_qs = [], []
+        self._emit_proc = None
+        self._started = False
+
+    # --------------------------------------------------------- accounting --
+    def _count_msg(self, msg: Any) -> None:
+        self.ipc_messages += 1
+        self.ipc_bytes += _pickled_size(msg)
+
+    def kill_intake_workers(self) -> None:
+        """Test hook: hard-kill every intake worker (crash drills)."""
+        for p in self._intake_procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=_JOIN_TIMEOUT_S)
+
+    def kill_emission_worker(self) -> None:
+        """Test hook: hard-kill the emission worker (crash drills)."""
+        if self._emit_proc is not None and self._emit_proc.is_alive():
+            self._emit_proc.terminate()
+            self._emit_proc.join(timeout=_JOIN_TIMEOUT_S)

@@ -210,6 +210,24 @@ class BlockPool:
         return PrefixMatch(block_ids=full, tail_donor=donor,
                            tail_len=tail_len)
 
+    def resident_prefix_tokens(self, tokens: Sequence[int]) -> int:
+        """Read-only trie probe: how many leading tokens of ``tokens`` are
+        covered by RESIDENT full blocks right now.  Takes no pins and does
+        not touch LRU clocks — admission grouping uses it to PREDICT
+        whether a same-group peer's pages would be visible after a split,
+        never to acquire references (that is ``lookup``'s job)."""
+        bs = self.block_size
+        node = self._root
+        pos = 0
+        while pos + bs <= len(tokens):
+            key = tuple(int(t) for t in tokens[pos:pos + bs])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            pos += bs
+        return pos
+
     def insert(self, tokens: Sequence[int],
                block_ids: Sequence[int]) -> List[Tuple[int, int, int]]:
         """Publish a prefilled prompt's FULL blocks into the trie.

@@ -1,0 +1,283 @@
+"""Host CPU topology discovery + affinity planning (frontend/topology.py).
+
+Pure host-side tests — no jax, no processes:
+
+* cpulist parsing (ranges, singletons, dedupe, empty)
+* sysfs parsing against canned tmp_path trees: single-socket flat, SMT
+  sibling grouping, multi-NUMA node maps, online-mask trimming, and the
+  None fallbacks for absent/partial trees
+* lscpu -p parsing including the empty-NODE non-NUMA form and malformed
+  input
+* discover() precedence: sysfs > lscpu text > flat fallback
+* plan_affinity invariants: engine core reserved with its FULL SMT
+  sibling set, workers on whole spare cores (disjoint from the engine
+  whenever spares exist), round-robin reuse when workers outnumber cores,
+  single-core degeneracy, reserve_engine_core=False widening
+* apply_affinity graceful degradation when sched_setaffinity is missing
+  or refused (returns False, never raises)
+"""
+
+import os
+
+import pytest
+
+from repro.serving.frontend import (
+    HostTopology,
+    LogicalCPU,
+    apply_affinity,
+    discover,
+    flat_topology,
+    from_lscpu,
+    from_sysfs,
+    parse_cpu_list,
+    plan_affinity,
+)
+from repro.serving.frontend import topology as topo_mod
+
+
+# ---------------------------------------------------------------------------
+# cpulist parsing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("text,want", [
+    ("0-3,8,10-11", [0, 1, 2, 3, 8, 10, 11]),
+    ("2", [2]),
+    ("0-2,1", [0, 1, 2]),          # overlap dedupes
+    ("3,1", [1, 3]),               # output is sorted
+    ("0-1,\n", [0, 1]),            # kernel files end with a newline
+    ("", []),
+    ("  ", []),
+])
+def test_parse_cpu_list(text, want):
+    assert parse_cpu_list(text) == want
+
+
+# ---------------------------------------------------------------------------
+# sysfs fixtures
+# ---------------------------------------------------------------------------
+
+
+def _sysfs_tree(root, cpus, nodes=None, online=None):
+    """Build ``<root>/devices/system/{cpu,node}`` from (cpu, core, socket)
+    triples + optional node->cpulist map + optional online mask."""
+    base = root / "devices" / "system" / "cpu"
+    for cpu, core, socket in cpus:
+        topo = base / f"cpu{cpu}" / "topology"
+        topo.mkdir(parents=True)
+        (topo / "core_id").write_text(f"{core}\n")
+        (topo / "physical_package_id").write_text(f"{socket}\n")
+    if online is not None:
+        (base / "online").write_text(online + "\n")
+    for node, cpulist in (nodes or {}).items():
+        d = root / "devices" / "system" / "node" / f"node{node}"
+        d.mkdir(parents=True)
+        (d / "cpulist").write_text(cpulist + "\n")
+    return str(root)
+
+
+def test_sysfs_single_socket_no_smt(tmp_path):
+    root = _sysfs_tree(tmp_path, [(i, i, 0) for i in range(4)])
+    topo = from_sysfs(root)
+    assert topo is not None and topo.source == "sysfs"
+    assert topo.n_logical == 4
+    assert topo.n_physical_cores == 4
+    assert topo.sockets == (0,)
+    assert topo.numa_nodes == (0,)      # no node tree -> everything node 0
+    assert not topo.smt_enabled
+
+
+def test_sysfs_smt_sibling_grouping(tmp_path):
+    # 8 logical cpus, kernel-style sibling numbering: cpu i and i+4 share
+    # physical core i%4
+    root = _sysfs_tree(tmp_path, [(i, i % 4, 0) for i in range(8)])
+    topo = from_sysfs(root)
+    assert topo.n_logical == 8
+    assert topo.n_physical_cores == 4
+    assert topo.smt_enabled
+    assert topo.cores() == {(0, c): (c, c + 4) for c in range(4)}
+
+
+def test_sysfs_multi_numa(tmp_path):
+    # 2 sockets x 2 cores x 2 threads; socket == NUMA node
+    cpus = [(cpu, (cpu // 2) % 2, cpu // 4) for cpu in range(8)]
+    root = _sysfs_tree(tmp_path, cpus,
+                       nodes={0: "0-3", 1: "4-7"})
+    topo = from_sysfs(root)
+    assert topo.numa_nodes == (0, 1)
+    assert topo.sockets == (0, 1)
+    assert topo.n_physical_cores == 4
+    assert topo.core_node((0, 0)) == 0
+    assert topo.core_node((1, 0)) == 1
+    assert {c.node for c in topo.cpus if c.cpu < 4} == {0}
+    assert {c.node for c in topo.cpus if c.cpu >= 4} == {1}
+
+
+def test_sysfs_online_mask_trims_offline_cpus(tmp_path):
+    root = _sysfs_tree(tmp_path, [(i, i, 0) for i in range(4)],
+                       online="0-2")
+    topo = from_sysfs(root)
+    assert topo.n_logical == 3
+    assert [c.cpu for c in topo.cpus] == [0, 1, 2]
+
+
+def test_sysfs_absent_or_partial_tree_returns_none(tmp_path):
+    assert from_sysfs(str(tmp_path / "nope")) is None
+    # cpu dirs exist but the per-cpu topology/ subtree is masked (container)
+    base = tmp_path / "devices" / "system" / "cpu" / "cpu0"
+    base.mkdir(parents=True)
+    assert from_sysfs(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# lscpu parsing
+# ---------------------------------------------------------------------------
+
+_LSCPU = """\
+# The following is the parsable format, which can be fed to other
+# programs. Each different item in every column has an unique ID
+# CPU,Core,Socket,Node
+0,0,0,0
+1,1,0,0
+2,0,0,0
+3,1,0,0
+"""
+
+
+def test_lscpu_parses_and_groups_siblings():
+    topo = from_lscpu(_LSCPU)
+    assert topo is not None and topo.source == "lscpu"
+    assert topo.n_logical == 4
+    assert topo.n_physical_cores == 2
+    assert topo.smt_enabled
+    assert topo.cores() == {(0, 0): (0, 2), (0, 1): (1, 3)}
+
+
+def test_lscpu_empty_node_field_is_node_zero():
+    topo = from_lscpu("0,0,0,\n1,1,0,\n")
+    assert topo is not None
+    assert topo.numa_nodes == (0,)
+
+
+@pytest.mark.parametrize("text", ["", "# only comments\n", "0,zero,0,0\n",
+                                  "0,0\n"])
+def test_lscpu_malformed_returns_none(text):
+    assert from_lscpu(text) is None
+
+
+# ---------------------------------------------------------------------------
+# discover() precedence + flat fallback
+# ---------------------------------------------------------------------------
+
+
+def test_discover_prefers_sysfs_over_lscpu(tmp_path):
+    root = _sysfs_tree(tmp_path, [(0, 0, 0), (1, 1, 0)])
+    topo = discover(sysfs_root=root, lscpu_output=_LSCPU)
+    assert topo.source == "sysfs"
+    assert topo.n_logical == 2
+
+
+def test_discover_falls_back_to_lscpu_then_flat(tmp_path):
+    missing = str(tmp_path / "no-sysfs")
+    assert discover(sysfs_root=missing, lscpu_output=_LSCPU).source == "lscpu"
+    flat = discover(sysfs_root=missing)
+    assert flat.source == "flat"
+    assert flat.n_logical == (os.cpu_count() or 1)
+    assert not flat.smt_enabled       # every cpu its own single-thread core
+
+
+# ---------------------------------------------------------------------------
+# affinity planning
+# ---------------------------------------------------------------------------
+
+
+def _smt_topo(n_cores=4, threads=2):
+    cpus = tuple(LogicalCPU(cpu=c * threads + t, core=c, socket=0, node=0)
+                 for c in range(n_cores) for t in range(threads))
+    return HostTopology(cpus=cpus, source="sysfs")
+
+
+def test_plan_reserves_full_engine_core_and_disjoint_workers():
+    topo = _smt_topo(n_cores=4)
+    plan = plan_affinity(topo, n_workers=3)
+    # the engine owns BOTH SMT siblings of one physical core
+    assert plan.engine_cpus in set(map(frozenset, topo.cores().values()))
+    assert len(plan.engine_cpus) == 2
+    # with spare cores available no worker touches the engine core
+    assert plan.n_workers == 3
+    for mask in plan.worker_cpus:
+        assert mask in set(map(frozenset, topo.cores().values()))
+        assert not (mask & plan.engine_cpus)
+
+
+def test_plan_round_robins_when_workers_outnumber_spare_cores():
+    topo = _smt_topo(n_cores=3)     # 1 engine core + 2 spares, 5 workers
+    plan = plan_affinity(topo, n_workers=5)
+    assert plan.n_workers == 5
+    assert all(not (m & plan.engine_cpus) for m in plan.worker_cpus)
+    # spares are reused in order: workers 0 and 2 share a core, etc.
+    assert plan.worker_cpus[0] == plan.worker_cpus[2] == plan.worker_cpus[4]
+    assert plan.worker_cpus[1] == plan.worker_cpus[3]
+    assert plan.worker_cpus[0] != plan.worker_cpus[1]
+
+
+def test_plan_numa_spread_keeps_worker_on_one_node():
+    cpus = tuple(LogicalCPU(cpu=i, core=i % 2, socket=i // 2, node=i // 2)
+                 for i in range(4))  # 2 nodes x 2 single-thread cores
+    topo = HostTopology(cpus=cpus, source="sysfs")
+    plan = plan_affinity(topo, n_workers=3)
+    for mask in plan.worker_cpus:
+        nodes = {c.node for c in topo.cpus if c.cpu in mask}
+        assert len(nodes) == 1      # a worker's mask never spans nodes
+
+
+def test_plan_single_core_host_shares_the_core():
+    topo = _smt_topo(n_cores=1)
+    plan = plan_affinity(topo, n_workers=2)
+    assert plan.engine_cpus == frozenset({0, 1})
+    assert all(m == plan.engine_cpus for m in plan.worker_cpus)
+
+
+def test_plan_no_reserve_widens_engine_mask():
+    topo = _smt_topo(n_cores=4)
+    plan = plan_affinity(topo, n_workers=1, reserve_engine_core=False)
+    assert plan.engine_cpus == frozenset(c.cpu for c in topo.cpus)
+
+
+def test_plan_rejects_zero_workers():
+    with pytest.raises(ValueError):
+        plan_affinity(_smt_topo(), n_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# apply_affinity fallback
+# ---------------------------------------------------------------------------
+
+
+def test_apply_affinity_missing_syscall_returns_false(monkeypatch):
+    monkeypatch.delattr(topo_mod.os, "sched_setaffinity", raising=False)
+    assert apply_affinity([0]) is False
+
+
+def test_apply_affinity_refused_returns_false(monkeypatch):
+    def refuse(pid, cpus):
+        raise OSError("containers say no")
+    monkeypatch.setattr(topo_mod.os, "sched_setaffinity", refuse,
+                        raising=False)
+    assert apply_affinity([0, 1]) is False
+
+
+def test_apply_affinity_empty_mask_is_a_noop():
+    assert apply_affinity([]) is False
+
+
+def test_apply_affinity_success_passes_int_set(monkeypatch):
+    calls = {}
+
+    def fake(pid, cpus):
+        calls["pid"], calls["cpus"] = pid, cpus
+
+    monkeypatch.setattr(topo_mod.os, "sched_setaffinity", fake,
+                        raising=False)
+    assert apply_affinity([1, 2, 2], pid=0) is True
+    assert calls == {"pid": 0, "cpus": {1, 2}}

@@ -49,6 +49,9 @@ DOCUMENTED_API = [
     "RequestState",
     "InvalidRequestError",
     "ServeReport",
+    "FrontendConfig",
+    "TokenStream",
+    "HostTopology",
     "CostEngine",
     "CostQuery",
     "Decision",
