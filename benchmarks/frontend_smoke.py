@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime import Runtime, synthetic_trace
+from repro.runtime import Runtime, RuntimeConfig, synthetic_trace
 
 ARCH = "tinyllama-1.1b"
 REQUESTS = 6
@@ -102,7 +102,9 @@ def _check_frontend_run(res, base_outputs, label: str) -> None:
 
 
 def run(csv=True, runtime=None) -> None:
-    rt = Runtime()  # own session => the serve_ipc rows below are ours
+    # own session => the serve_ipc rows below are ours (corrections on:
+    # the loop must not change a single token for this gate to pass)
+    rt = Runtime(RuntimeConfig(corrections=True))
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -153,7 +155,14 @@ def run(csv=True, runtime=None) -> None:
           f"{sum(1 for e in w_rows if e.measured_s is not None)},"
           f"coalesce_measured="
           f"{sum(1 for e in c_rows if e.measured_s is not None)}")
-    print("frontend_smoke,token_identical=True,transcript_identical=True")
+    # drift gate only bites on a spec calibrated against THIS backend;
+    # datasheet-spec runs drift by construction and prove nothing
+    if rt.engine.calibration is not None:
+        rt.engine.assert_drift_resolved()
+    print("frontend_smoke,token_identical=True,transcript_identical=True,"
+          "drift_check="
+          + ("ok" if rt.engine.calibration is not None
+             else "skipped_uncalibrated"))
 
 
 if __name__ == "__main__":

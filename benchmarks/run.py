@@ -21,6 +21,13 @@
                      every request terminal, transient faults retry to a
                      token-identical finish; writes the SLO row under
                      BENCH_serving.json's "stress" key
+  chaos_bench      — closed-loop recovery drill: perturb the calibrated
+                     HardwareSpec 4x + noisy measurements, prove decisions
+                     at three serve sites reconverge to the unperturbed
+                     verdicts within a bounded measurement budget (token
+                     identity intact, corrections persisted across a
+                     Runtime restart); writes BENCH_serving.json's
+                     "chaos" key
 
 Every suite is a thin adapter over the public Runtime API: ``run(csv=True,
 runtime=None)`` receives the session (engine + caches + ledger) from this
@@ -44,11 +51,13 @@ SUITE_NAMES = (
     "cost_ledger",
     "serving_bench",
     "stress_bench",
+    "chaos_bench",
 )
 
 
 def _suites():
     from benchmarks import (
+        chaos_bench,
         cost_ledger,
         kernels_bench,
         matmul_crossover,
@@ -68,6 +77,7 @@ def _suites():
         "cost_ledger": cost_ledger.run,
         "serving_bench": serving_bench.run,
         "stress_bench": stress_bench.run,
+        "chaos_bench": chaos_bench.run,
     }
     assert set(suites) == set(SUITE_NAMES)
     return suites
@@ -100,8 +110,10 @@ def run_suites(runtime, only=None):
 def _print_drift(runtime) -> None:
     """Calibration-drift summary over everything the suites just measured:
     per-site geometric-mean measured/predicted ratio from the CostEngine
-    ledger, with drifting sites (ratio outside [1/3, 3]) called out — the
-    signal that the calibrated HardwareSpec no longer matches the backend."""
+    ledger, with RAW drift (outside the site's configured band) called out
+    alongside the live correction factor and whether it absorbs the drift
+    (``resolved``) — the open question a DRIFTING flag leaves behind is
+    exactly what the closed loop (DESIGN.md §10) answers."""
     try:
         drift = runtime.engine.drift_report()
     except Exception:
@@ -111,9 +123,15 @@ def _print_drift(runtime) -> None:
         return
     print("### calibration drift (measured/predicted, trailing window)")
     for site, row in sorted(drift.items()):
-        flag = "  DRIFTING" if row.get("drifting") else ""
+        if row.get("drifting"):
+            flag = ("  DRIFTING(resolved)" if row.get("resolved")
+                    else "  DRIFTING")
+        else:
+            flag = ""
         ratio = row.get("geomean_ratio", float("nan"))
         print(f"drift,site={site},geomean_ratio={ratio:.3g},"
+              f"raw_ratio={row.get('raw_ratio', float('nan')):.3g},"
+              f"correction={row.get('correction', 1.0):.3g},"
               f"rows={row.get('n', 0)}{flag}")
 
 

@@ -59,7 +59,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime import Runtime, synthetic_trace
+from repro.runtime import Runtime, RuntimeConfig, synthetic_trace
 
 BENCH_JSON = "BENCH_serving.json"
 TRAJECTORY_TAG = "pr9-frontend-ipc"
@@ -227,7 +227,11 @@ def _trajectory(previous: dict, entry: dict) -> list:
 
 
 def run(csv=True, runtime=None, check_regression: bool = False) -> None:
-    rt = Runtime()  # own session => fresh ledger: serve rows are this suite's
+    # own session => fresh ledger: serve rows are this suite's.  The online
+    # correction loop is live: argmin sweeps are invariant under its uniform
+    # per-site scaling, so decisions (and tokens) are untouched — but the
+    # drift gate below can require any out-of-band site to be absorbed.
+    rt = Runtime(RuntimeConfig(corrections=True))
     previous = _load_previous()
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
@@ -356,8 +360,10 @@ def run(csv=True, runtime=None, check_regression: bool = False) -> None:
         "serve_ledger_rows": len(serve_rows),
         "serve_ledger_measured": len(measured),
     }
-    if "stress" in previous:  # stress_bench owns this key; carry it forward
-        result["stress"] = previous["stress"]
+    # stress_bench / chaos_bench own these keys; carry them forward
+    for theirs in ("stress", "chaos"):
+        if theirs in previous:
+            result[theirs] = previous[theirs]
     result["trajectory"] = _trajectory(previous, {
         "tag": TRAJECTORY_TAG,
         "staggered_continuous_tok_per_s": cont_st.tok_per_s,
@@ -429,6 +435,15 @@ def run(csv=True, runtime=None, check_regression: bool = False) -> None:
     if check_regression:
         _check_regression(previous, result["full_load"],
                           result["shared_prefix"])
+        # drift gate: this run's measured rows must leave no site out of
+        # band without the correction loop absorbing it — meaningful only
+        # when the spec was calibrated against THIS backend (a datasheet
+        # spec on a different machine drifts by construction)
+        if rt.engine.calibration is not None:
+            rt.engine.assert_drift_resolved()
+            print("serving_bench,drift_check=ok")
+        else:
+            print("serving_bench,drift_check=skipped_uncalibrated")
 
 
 def _check_regression(previous: dict, full_load: dict,

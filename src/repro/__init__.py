@@ -47,6 +47,7 @@ __all__ = [
     "TokenStream",
     "HostTopology",
     # cost subsystem (the Runtime's internals, exposed for injection)
+    "CorrectionState",
     "CostEngine",
     "CostQuery",
     "Decision",
@@ -79,6 +80,7 @@ _EXPORTS = {
     "FrontendConfig": "repro.serving",
     "TokenStream": "repro.serving",
     "HostTopology": "repro.serving",
+    "CorrectionState": "repro.core.costs",
     "CostEngine": "repro.core.costs",
     "CostQuery": "repro.core.costs",
     "Decision": "repro.core.costs",

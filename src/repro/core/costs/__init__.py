@@ -7,6 +7,10 @@ engine.py      — CostEngine: uniform CostQuery -> Decision interface with a
                  decision cache; owned by a repro.Runtime (get_engine() is a
                  deprecated shim over the default Runtime)
 ledger.py      — predicted-vs-measured overhead ledger (JSON export + table)
+corrections.py — per-site multiplicative corrections learned online from
+                 measured ledger rows, applied at query time behind
+                 clamp / rollback / cache-invalidation guardrails
+                 (DESIGN.md §10)
 autotune.py    — empirical kernel autotuner: measured block-shape search with
                  the analytic model as prior, fingerprint-keyed cache
                  (kernel families live in kernels/tuning.py; DESIGN.md §4)
@@ -26,6 +30,10 @@ from repro.core.costs.calibration import (  # noqa: F401
     calibrate,
     load_calibration,
     save_calibration,
+)
+from repro.core.costs.corrections import (  # noqa: F401
+    CorrectionState,
+    SiteCorrection,
 )
 from repro.core.costs.engine import (  # noqa: F401
     CostEngine,

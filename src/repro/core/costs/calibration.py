@@ -263,31 +263,57 @@ class CalibrationResult:
     fingerprint: str
     from_cache: bool
     measurements: dict  # raw probe values (doc/debug)
+    # persisted per-site correction state (corrections.py) riding in the
+    # same fingerprint-keyed cache entry, and the path it lives at — the
+    # engine writes healed specs/corrections back through this
+    corrections: dict = dataclasses.field(default_factory=dict)
+    path: Optional[Path] = None
+
+
+# Per-field probe dispatch: which microbenchmark calibrates each
+# HardwareSpec field.  Keeping this a table (not a hard-coded sequence)
+# is what makes TARGETED recalibration possible: drift at one CostQuery
+# site re-runs only the probes for the fields that site depends on
+# (hw.SITE_FIELDS), instead of re-benchmarking the whole spec.  Every
+# probe takes (base_spec, matmul_order) even when it needs neither, so
+# the runner stays uniform.
+PROBES = {
+    "kernel_launch_s": lambda base, order: _measure_launch_latency(),
+    "host_sync_s": lambda base, order: _measure_host_sync(),
+    "prefix_lookup_s": lambda base, order: _measure_prefix_lookup(),
+    "ipc_round_trip_s": lambda base, order: _measure_ipc()[0],
+    "ipc_bytes_per_s": lambda base, order: _measure_ipc()[1],
+    "hbm_bw": lambda base, order: _measure_memory_bw(),
+    "peak_flops_f32":
+        lambda base, order: _measure_matmul_flops(order, dtype="float32"),
+    "peak_flops_bf16":
+        lambda base, order: _measure_matmul_flops(order, dtype="bfloat16"),
+    "collective_base_s": lambda base, order: _measure_collective_base(),
+    "ici_bw_per_link":
+        lambda base, order: _measure_interconnect_bw(links=base.ici_links),
+}
+
+
+def run_probe_fields(fields, base: HardwareSpec = V5E, *,
+                     matmul_order: int = 1024) -> dict:
+    """Run the probes for ``fields`` only, best-effort: a field with no
+    probe is skipped; a probe that fails (or declines, e.g. collective
+    probes on a single-device backend) reports None so the caller keeps
+    the current value for that field."""
+    probes = {}
+    for name in fields:
+        fn = PROBES.get(name)
+        if fn is None:
+            continue
+        try:
+            probes[name] = fn(base, matmul_order)
+        except Exception:  # any backend quirk: keep the base value
+            probes[name] = None
+    return probes
 
 
 def _run_probes(base: HardwareSpec, *, matmul_order: int) -> dict:
-    probes = {}
-
-    def attempt(name, fn):
-        try:
-            probes[name] = fn()
-        except Exception:  # any backend quirk: keep the base value
-            probes[name] = None
-
-    attempt("kernel_launch_s", _measure_launch_latency)
-    attempt("host_sync_s", _measure_host_sync)
-    attempt("prefix_lookup_s", _measure_prefix_lookup)
-    attempt("ipc_round_trip_s", lambda: _measure_ipc()[0])
-    attempt("ipc_bytes_per_s", lambda: _measure_ipc()[1])
-    attempt("hbm_bw", _measure_memory_bw)
-    attempt("peak_flops_f32",
-            lambda: _measure_matmul_flops(matmul_order, dtype="float32"))
-    attempt("peak_flops_bf16",
-            lambda: _measure_matmul_flops(matmul_order, dtype="bfloat16"))
-    attempt("collective_base_s", _measure_collective_base)
-    attempt("ici_bw_per_link",
-            lambda: _measure_interconnect_bw(links=base.ici_links))
-    return probes
+    return run_probe_fields(PROBES.keys(), base, matmul_order=matmul_order)
 
 
 def calibrate(base: HardwareSpec = V5E, *, cache_dir: Optional[Path] = None,
@@ -305,24 +331,32 @@ def calibrate(base: HardwareSpec = V5E, *, cache_dir: Optional[Path] = None,
         cached = load_calibration(cache_path, fingerprint=fp)
         if cached is not None:
             return CalibrationResult(cached["spec"], fp, True,
-                                     cached.get("measurements", {}))
+                                     cached.get("measurements", {}),
+                                     corrections=cached.get("corrections", {}),
+                                     path=cache_path)
 
     probes = _run_probes(base, matmul_order=matmul_order)
     updates = {k: v for k, v in probes.items() if v is not None}
     spec = dataclasses.replace(
         base, name=f"calibrated-{fp}", **updates)
     save_calibration(cache_path, spec, fingerprint=fp, measurements=probes)
-    return CalibrationResult(spec, fp, False, probes)
+    # a forced re-calibration drops any persisted corrections on purpose:
+    # they corrected the OLD spec, and a fresh spec must not inherit them
+    return CalibrationResult(spec, fp, False, probes, path=cache_path)
 
 
 def save_calibration(path: Path, spec: HardwareSpec, *, fingerprint: str,
-                     measurements: Optional[dict] = None) -> None:
+                     measurements: Optional[dict] = None,
+                     corrections: Optional[dict] = None) -> None:
     path.parent.mkdir(parents=True, exist_ok=True)
     payload = {
         "schema": _SCHEMA_VERSION,
         "fingerprint": fingerprint,
         "spec": spec.to_dict(),
         "measurements": measurements or {},
+        # per-site correction state (corrections.py) — additive key, so
+        # pre-corrections caches stay schema-valid and load with {}
+        "corrections": corrections or {},
     }
     tmp = path.with_suffix(".tmp")
     tmp.write_text(json.dumps(payload, indent=1))
@@ -347,4 +381,5 @@ def load_calibration(path: Path, *, fingerprint: Optional[str] = None
     if missing:
         return None
     return {"spec": HardwareSpec.from_dict(payload["spec"]),
-            "measurements": payload.get("measurements", {})}
+            "measurements": payload.get("measurements", {}),
+            "corrections": payload.get("corrections", {})}

@@ -29,16 +29,22 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from pathlib import Path
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
-from repro.core.costs.calibration import CalibrationResult, calibrate
+from repro.core.costs.calibration import (
+    CalibrationResult,
+    calibrate,
+    run_probe_fields,
+    save_calibration,
+)
+from repro.core.costs.corrections import CorrectionState
 from repro.core.costs.ledger import LedgerEntry, OverheadLedger
 from repro.core.costs.model import (
     MATMUL_STRATEGIES,
     CostBreakdown,
     OverheadModel,
 )
-from repro.hw import V5E, HardwareSpec
+from repro.hw import SITE_FIELDS, V5E, HardwareSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +95,10 @@ class Decision:
     baseline: Optional[CostBreakdown] = None
     alternatives: Tuple[CostBreakdown, ...] = ()
     value: Any = None  # python-native choice (e.g. int chunk size)
+    # per-site correction factor baked into predicted/baseline/alternatives
+    # at query time (1.0 when corrections are off) — ledgered with every
+    # row so the raw analytic ratio stays recoverable
+    correction: float = 1.0
 
     @property
     def predicted_s(self) -> float:
@@ -112,7 +122,8 @@ class CostEngine:
     def __init__(self, hw: Optional[HardwareSpec] = None, *,
                  model: Optional[OverheadModel] = None,
                  ledger: Optional[OverheadLedger] = None,
-                 calibration: Optional[CalibrationResult] = None):
+                 calibration: Optional[CalibrationResult] = None,
+                 corrections: Optional[CorrectionState] = None):
         self.model = model if model is not None else OverheadModel(hw=hw or V5E)
         self.hw = self.model.hw
         self.ledger = ledger if ledger is not None else OverheadLedger()
@@ -120,6 +131,20 @@ class CostEngine:
         self._cache: Dict[CostQuery, Decision] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+        # --- closed-loop state (DESIGN.md §10; all inert when
+        # corrections is None: the default engine behaves exactly as the
+        # open-loop one did) ---
+        self.corrections = corrections
+        self._site_factor = 1.0  # factor live during the current solve
+        self.cache_invalidations = 0
+        self.perturbed_fields: Dict[str, float] = {}  # chaos hook bookkeeping
+        self.recalibrated_fields: Dict[str, float] = {}
+        # chaos fault hook: site -> multiplicative noise on measured seconds
+        self.measurement_noise: Optional[Callable[[str], float]] = None
+        if corrections is not None:
+            # every measured row (record_measured AND ledger.measure blocks)
+            # flows back through one observer
+            self.ledger.on_measurement = self._on_measurement
 
     # ------------------------------------------------------------------
     # Construction
@@ -130,10 +155,16 @@ class CostEngine:
                    cache_dir: Optional[Path] = None, force: bool = False,
                    matmul_order: int = 1024, **kw) -> "CostEngine":
         """Engine whose model runs on a spec microbenchmarked against the
-        RUNNING backend (cached by backend fingerprint)."""
+        RUNNING backend (cached by backend fingerprint).  When a
+        ``corrections`` state is passed, factors persisted in the same
+        fingerprint-keyed cache entry are restored into it — a new session
+        inherits the healed state the previous one learned."""
         result = calibrate(base, cache_dir=cache_dir, force=force,
                            matmul_order=matmul_order)
-        return cls(hw=result.spec, calibration=result, **kw)
+        eng = cls(hw=result.spec, calibration=result, **kw)
+        if eng.corrections is not None:
+            eng.corrections.load(result.corrections)
+        return eng
 
     # ------------------------------------------------------------------
     # The uniform interface
@@ -141,7 +172,16 @@ class CostEngine:
 
     def query(self, q: CostQuery, *, record: bool = True) -> Decision:
         """CostQuery -> Decision, memoized.  Every call (hit or miss) is
-        appended to the ledger unless ``record=False``."""
+        appended to the ledger unless ``record=False``.
+
+        With a corrections state attached, the site's current factor is
+        applied at solve time: every candidate breakdown is scaled
+        uniformly (argmin verdicts unchanged — see corrections.py) and
+        absolute-threshold solvers (serve_admit) read ``_site_factor``
+        inside their comparison so deadline verdicts track the corrected
+        scale.  Cached decisions keep the factor they were solved with;
+        when the factor moves past the invalidation threshold the cache
+        entries for that site are dropped, so staleness is bounded."""
         cached = q in self._cache
         if cached:
             self.cache_hits += 1
@@ -151,20 +191,39 @@ class CostEngine:
             solver = getattr(self, f"_solve_{q.kind}", None)
             if solver is None:
                 raise ValueError(f"unknown cost query kind: {q.kind!r}")
-            dec = solver(q)
+            f = (self.corrections.factor(q.kind)
+                 if self.corrections is not None else 1.0)
+            self._site_factor = f
+            try:
+                dec = solver(q)
+            finally:
+                self._site_factor = 1.0
+            if f != 1.0:
+                dec = dataclasses.replace(
+                    dec, correction=f, predicted=dec.predicted.scaled(f),
+                    baseline=(dec.baseline.scaled(f)
+                              if dec.baseline is not None else None),
+                    alternatives=tuple(cb.scaled(f)
+                                       for cb in dec.alternatives))
             self._cache[q] = dec
         if record:
             self.ledger.record(q.kind, q.as_dict(), dec.choice, dec.predicted,
-                               cached=cached)
+                               cached=cached, correction=dec.correction)
         return dec
 
     def record_measured(self, decision: Decision, seconds: float,
                         note: str = "") -> LedgerEntry:
         """Attach a measured wall time for an executed decision (closing the
-        predicted-vs-measured loop outside a ``ledger.measure`` block)."""
+        predicted-vs-measured loop outside a ``ledger.measure`` block).
+        The chaos harness's noise hook perturbs the measurement here —
+        upstream of the ledger and the correction loop, exactly where a
+        noisy clock would."""
+        if self.measurement_noise is not None:
+            seconds *= float(self.measurement_noise(decision.query.kind))
         entry = self.ledger.record(
             decision.query.kind, decision.query.as_dict(), decision.choice,
-            decision.predicted, note=note or "measured")
+            decision.predicted, note=note or "measured",
+            correction=decision.correction)
         self.ledger.attach_measurement(entry, seconds)
         return entry
 
@@ -390,10 +449,16 @@ class CostEngine:
             dtype_bytes=q.dtype_bytes)
         slack_us = q.param("slack_us")
         ttft_slack_us = q.param("ttft_slack_us")
+        # serve_admit compares against an ABSOLUTE slack, not an argmin
+        # sweep, so the per-site correction factor must enter the
+        # comparison itself — it is the one solver a scale correction can
+        # (and should) flip
+        f = self._site_factor
         admit = True
-        if slack_us is not None and admit_cb.total > float(slack_us) * 1e-6:
+        if slack_us is not None and admit_cb.total * f > float(slack_us) * 1e-6:
             admit = False
-        if ttft_slack_us is not None and prefill_s > float(ttft_slack_us) * 1e-6:
+        if (ttft_slack_us is not None
+                and prefill_s * f > float(ttft_slack_us) * 1e-6):
             admit = False
         shed = CostBreakdown("shed", 0.0, 0.0, 0.0, 0.0)
         return Decision(q, "admit" if admit else "shed",
@@ -725,15 +790,149 @@ class CostEngine:
         return {"hits": self.cache_hits, "misses": self.cache_misses,
                 "size": len(self._cache)}
 
-    def drift_report(self, *, window: int = 20,
-                     threshold: float = 3.0) -> Dict[str, Dict[str, Any]]:
-        """Per-site calibration drift over the trailing ``window`` measured
-        rows: geometric-mean measured/predicted ratio, flagged ``drifting``
-        when it leaves [1/threshold, threshold].  The first concrete step of
-        closing the ledger loop — a drifting site means the calibrated
-        HardwareSpec no longer describes the running backend and
-        re-calibration is warranted (surfaced by ``ledger.report()``)."""
-        return self.ledger.drift(window=window, threshold=threshold)
+    def drift_report(self, *, window: Optional[int] = None,
+                     threshold: Optional[float] = None
+                     ) -> Dict[str, Dict[str, Any]]:
+        """Per-site calibration drift over each site's trailing window of
+        measured rows (per-site window/threshold from the ledger's
+        RuntimeConfig-fed knobs; explicit args override).  ``drifting``
+        flags the RAW analytic ratio leaving [1/threshold, threshold] — the
+        calibrated HardwareSpec no longer describes the running backend
+        there; ``resolved`` reports whether the site's current correction
+        factor absorbs it.  Drifting sites are what ``maybe_recalibrate``
+        acts on; unresolved ones are what the bench gates fail on."""
+        return self.ledger.drift(window=window, threshold=threshold,
+                                 corrections=self.corrections)
+
+    def assert_drift_resolved(self, *, min_rows: int = 5) -> None:
+        """Bench/CI gate behind ``drift_report``: raise AssertionError if
+        any site's RAW trailing ratio is out of band with at least
+        ``min_rows`` measured rows AND the correction loop has not absorbed
+        it — the calibrated model is wrong somewhere and nothing is
+        compensating.  Machine-normalized by construction (ratios of
+        same-run measurements)."""
+        bad = {s: d for s, d in self.drift_report().items()
+               if d["drifting"] and not d["resolved"] and d["n"] >= min_rows}
+        if bad:
+            lines = "; ".join(
+                f"{s}: raw x{d['raw_ratio']:.2f} over {d['n']} rows "
+                f"(correction x{d['correction']:.2f}, "
+                f"band 1/{d['threshold']:.3g}..{d['threshold']:.3g})"
+                for s, d in sorted(bad.items()))
+            raise AssertionError(f"unresolved calibration drift: {lines}")
+
+    # ------------------------------------------------------------------
+    # Closed-loop calibration (DESIGN.md §10): corrections feedback,
+    # targeted recalibration, chaos fault hooks, persistence
+    # ------------------------------------------------------------------
+
+    def _on_measurement(self, entry: LedgerEntry) -> None:
+        """Ledger observer: fold one measured row into the site's
+        correction, then act on the guardrail events — an invalidation
+        drops the site's cached verdicts, and any event checkpoints the
+        corrections into the fingerprint-keyed calibration cache."""
+        if self.corrections is None:
+            return
+        raw = entry.raw_ratio
+        if raw is None or raw <= 0:
+            return
+        events = self.corrections.update(entry.site, raw, entry.correction)
+        if "invalidate" in events:
+            self.invalidate_site(entry.site)
+        if events:
+            self.save_state()
+
+    def invalidate_site(self, site: str) -> int:
+        """Drop every cached Decision for one CostQuery site (the model
+        that priced them has moved); returns how many were dropped."""
+        stale = [q for q in self._cache if q.kind == site]
+        for q in stale:
+            del self._cache[q]
+        self.cache_invalidations += 1
+        return len(stale)
+
+    def _swap_spec(self, spec: HardwareSpec) -> None:
+        self.model = dataclasses.replace(self.model, hw=spec)
+        self.hw = spec
+        self._cache.clear()  # every cached verdict priced the old spec
+
+    def perturb_hw(self, **fields) -> HardwareSpec:
+        """Chaos fault hook: replace HardwareSpec fields in place (e.g.
+        ``perturb_hw(host_sync_s=4 * engine.hw.host_sync_s)``), rebuilding
+        the model and dropping the decision cache.  The perturbation is
+        remembered so the chaos harness can assert recalibration healed
+        exactly what it broke.  Test/benchmark surface — nothing in the
+        serving path calls this."""
+        self._swap_spec(dataclasses.replace(self.hw, **fields))
+        self.perturbed_fields.update(fields)
+        return self.hw
+
+    def recalibrate_fields(self, fields: Sequence[str], *,
+                           matmul_order: int = 1024) -> Dict[str, float]:
+        """Targeted recalibration: re-run only the probes for ``fields``,
+        replace the fields a probe produced a value for, drop the decision
+        cache, reset corrections for every site those fields feed (the new
+        spec now explains the measurements — a stale factor would
+        double-correct), and persist the healed spec.  Returns the applied
+        updates."""
+        probes = run_probe_fields(fields, self.hw, matmul_order=matmul_order)
+        updates = {k: float(v) for k, v in probes.items() if v is not None}
+        if not updates:
+            return updates
+        self._swap_spec(dataclasses.replace(self.hw, **updates))
+        self.recalibrated_fields.update(updates)
+        for name in updates:
+            self.perturbed_fields.pop(name, None)
+        if self.corrections is not None:
+            for site, flds in SITE_FIELDS.items():
+                if set(flds) & set(updates):
+                    self.corrections.reset_site(site)
+        self.save_state(measurements=probes)
+        return updates
+
+    def maybe_recalibrate(self, *, min_rows: int = 5,
+                          force: bool = False,
+                          matmul_order: int = 1024) -> Dict[str, Any]:
+        """Drift -> action: for every site whose RAW trailing ratio is out
+        of band (``drift_report``) with at least ``min_rows`` measured
+        rows, re-run that site's field probes (``hw.SITE_FIELDS``).  Each
+        field re-probes at most once per session unless ``force`` — drift
+        statistics lag the heal (old rows stay in the window), and probing
+        in a loop would measure nothing new."""
+        drift = self.drift_report()
+        sites = [s for s, d in drift.items()
+                 if d["drifting"] and d["n"] >= min_rows]
+        fields: list = []
+        for s in sites:
+            for name in SITE_FIELDS.get(s, ()):
+                if name not in fields and (
+                        force or name not in self.recalibrated_fields):
+                    fields.append(name)
+        updates = (self.recalibrate_fields(fields, matmul_order=matmul_order)
+                   if fields else {})
+        return {"sites": sites, "probed": fields, "updates": updates}
+
+    def save_state(self, *, measurements: Optional[dict] = None
+                   ) -> Optional[Path]:
+        """Persist the CURRENT spec + correction state into the same
+        fingerprint-keyed cache entry ``calibrate()`` reads, so the next
+        session inherits the healed state.  No-op (returns None) on an
+        uncalibrated engine — there is no cache entry to own."""
+        cal = self.calibration
+        if cal is None or cal.path is None:
+            return None
+        meas = dict(cal.measurements)
+        if measurements:
+            meas.update({k: v for k, v in measurements.items()
+                         if v is not None})
+        save_calibration(
+            cal.path, self.hw, fingerprint=cal.fingerprint,
+            measurements=meas,
+            corrections=(self.corrections.to_dict()
+                         if self.corrections is not None else {}))
+        self.calibration = dataclasses.replace(cal, spec=self.hw,
+                                               measurements=meas)
+        return cal.path
 
 
 # ---------------------------------------------------------------------------

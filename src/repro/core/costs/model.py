@@ -57,6 +57,19 @@ class CostBreakdown:
         }
         return max(terms, key=terms.get)
 
+    def scaled(self, factor: float) -> "CostBreakdown":
+        """This breakdown with every term multiplied by ``factor`` — the
+        CostEngine's per-site correction (corrections.py).  ``total`` is
+        max(compute, memory) + collective + fixed, which is homogeneous of
+        degree 1, so the scaled total is exactly factor x total and the
+        dominant term is unchanged: a uniform correction re-scales a
+        strategy's cost without re-shaping its regime."""
+        if factor == 1.0:
+            return self
+        return CostBreakdown(self.strategy, self.compute * factor,
+                             self.memory * factor, self.collective * factor,
+                             self.fixed * factor)
+
     def as_dict(self) -> dict:
         return {
             "strategy": self.strategy,

@@ -59,6 +59,31 @@ class HardwareSpec:
 
 V5E = HardwareSpec()
 
+# Which HardwareSpec fields dominate each CostQuery site's prediction.
+# This is the dispatch table for TARGETED recalibration (DESIGN.md §10):
+# when a site shows sustained out-of-band drift, only the probes for ITS
+# fields re-run — re-measuring the whole spec to fix one drifted constant
+# would perturb every other site's healthy calibration for nothing.
+# Fields without a calibration probe on the running backend (probe returns
+# None) keep their current value; that is the probe layer's concern, not
+# this table's.
+SITE_FIELDS = {
+    "matmul": ("peak_flops_bf16", "peak_flops_f32", "hbm_bw",
+               "kernel_launch_s"),
+    "sort": ("hbm_bw", "kernel_launch_s"),
+    "scan_chunk": ("hbm_bw", "kernel_launch_s"),
+    "moe_dispatch": ("ici_bw_per_link", "collective_base_s"),
+    "layer_shard": ("peak_flops_bf16", "ici_bw_per_link",
+                    "collective_base_s"),
+    "autotune": ("kernel_launch_s", "hbm_bw"),
+    "serve": ("peak_flops_bf16", "hbm_bw", "kernel_launch_s"),
+    "serve_macro": ("host_sync_s", "kernel_launch_s"),
+    "serve_shard": ("ici_bw_per_link", "collective_base_s"),
+    "serve_admit": ("peak_flops_bf16", "hbm_bw"),
+    "serve_prefix": ("prefix_lookup_s", "hbm_bw"),
+    "serve_ipc": ("ipc_round_trip_s", "ipc_bytes_per_s"),
+}
+
 
 def mxu_aligned(n: int, spec: HardwareSpec = V5E) -> bool:
     """True if a matmul dim is MXU-tile aligned."""

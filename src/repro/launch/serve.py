@@ -22,7 +22,10 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import signal
 import sys
+import threading
 
 import jax
 
@@ -115,6 +118,10 @@ def main(argv=None):
                     help="per-request incremental token streams at "
                          "macro-step boundaries (default on when --workers "
                          "is set); prints TTFT from the stream stamps")
+    ap.add_argument("--corrections", action="store_true",
+                    help="enable the online correction loop: per-site "
+                         "multiplicative factors learned from measured "
+                         "ledger rows (equivalent to REPRO_CORRECTIONS=1)")
     args = ap.parse_args(argv)
 
     # fail-fast flag validation (mirrors Runtime.serve, but at the CLI
@@ -182,7 +189,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    rt = Runtime(RuntimeConfig.from_env())
+    rt_cfg = RuntimeConfig.from_env()
+    if args.corrections:
+        rt_cfg = dataclasses.replace(rt_cfg, corrections=True)
+    rt = Runtime(rt_cfg)
     # one model + params shared by both engines (same weights, fair compare)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -198,22 +208,55 @@ def main(argv=None):
                     "off": False}[args.prefix_cache]
     modes = {"static": ("static",), "continuous": ("continuous",),
              "both": ("static", "continuous")}[args.engine]
-    results = [
-        rt.serve(cfg, trace(), mode=mode, model=model, params=params,
-                 slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
-                 prefill_chunk=args.prefill_chunk, macro_step=args.macro_step,
-                 mesh_shape=mesh_shape if mode == "continuous" else None,
-                 shard_params=args.serve_shard,
-                 queue_limit=args.queue_limit, deadline_ms=args.deadline_ms,
-                 inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms,
-                 paged=args.paged and mode == "continuous",
-                 block_size=args.block_size, prefix_cache=prefix_cache,
-                 frontend=frontend if mode == "continuous" else None,
-                 pin=args.pin,
-                 stream=(True if args.stream and mode == "continuous"
-                         else "auto"))
-        for mode in modes
-    ]
+
+    # graceful shutdown: first SIGINT/SIGTERM sets the stop event — the
+    # continuous engine stops intake (queued/waiting requests become typed
+    # REJECTED), drains in-flight requests to terminal states, and the run
+    # still falls through to the report below.  A second signal restores
+    # the previous handler's behaviour (hard exit for SIGINT).
+    stop_event = threading.Event()
+    prev_handlers = {}
+
+    def _on_signal(signum, frame):
+        stop_event.set()
+        if signum in prev_handlers:
+            signal.signal(signum, prev_handlers[signum])
+
+    for signum in (signal.SIGINT, signal.SIGTERM):
+        try:
+            prev_handlers[signum] = signal.signal(signum, _on_signal)
+        except ValueError:
+            pass  # not the main thread: degrade to no graceful stop
+
+    results = []
+    try:
+        for mode in modes:
+            if stop_event.is_set():
+                break  # stopped during an earlier engine's run
+            results.append(rt.serve(
+                cfg, trace(), mode=mode, model=model, params=params,
+                slots=args.slots, max_len=args.max_len, eos_id=args.eos_id,
+                prefill_chunk=args.prefill_chunk, macro_step=args.macro_step,
+                mesh_shape=mesh_shape if mode == "continuous" else None,
+                shard_params=args.serve_shard,
+                queue_limit=args.queue_limit, deadline_ms=args.deadline_ms,
+                inject_fault=args.inject_fault, watchdog_ms=args.watchdog_ms,
+                paged=args.paged and mode == "continuous",
+                block_size=args.block_size, prefix_cache=prefix_cache,
+                frontend=frontend if mode == "continuous" else None,
+                pin=args.pin,
+                stop_event=stop_event if mode == "continuous" else None,
+                stream=(True if args.stream and mode == "continuous"
+                        else "auto")))
+    finally:
+        for signum, handler in prev_handlers.items():
+            try:
+                signal.signal(signum, handler)
+            except ValueError:
+                pass
+
+    if stop_event.is_set():
+        print("interrupted: intake stopped, in-flight requests drained")
 
     def ms(v):
         return f"{v*1e3:6.0f}ms" if v is not None else "     --"
@@ -282,6 +325,11 @@ def main(argv=None):
         meas = f"{e.measured_s:.3e}s" if e.measured_s is not None else "-"
         print(f"    {op:14s} {e.choice:14s} "
               f"pred {e.predicted_s:.3e}s meas {meas} {e.note}")
+    corr = rt.engine.corrections
+    if corr is not None and corr.sites():
+        facts = ", ".join(f"{s} x{corr.factor(s):.2f}"
+                          for s in sorted(corr.sites()))
+        print(f"corrections: {facts}")
     return 0
 
 

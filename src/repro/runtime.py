@@ -41,6 +41,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional
 import numpy as np
 
 from repro.core.costs.autotune import Autotuner
+from repro.core.costs.corrections import CorrectionState
 from repro.core.costs.engine import CostEngine
 from repro.core.costs.ledger import OverheadLedger
 from repro.hw import V5E, HardwareSpec
@@ -69,6 +70,24 @@ class RuntimeConfig:
                      "model": 2}``); ``None`` means one data axis over all
                      visible devices.
     ``ledger_max_entries`` — overhead-ledger cap (drops are counted).
+    ``corrections`` — close the ledger loop (DESIGN.md §10): learn per-site
+                     multiplicative corrections from measured ledger rows
+                     and apply them at query time (clamped, rollback- and
+                     invalidation-guarded).  Off by default: an open-loop
+                     session prices decisions exactly as the analytic
+                     model does.
+    ``auto_recalibrate`` — let ``Runtime.serve`` act on sustained raw
+                     drift after a trace drains: targeted re-runs of only
+                     the drifting sites' calibration probes
+                     (``engine.maybe_recalibrate``).  Requires
+                     ``calibrate`` to persist the healed spec.
+    ``drift_window`` / ``drift_threshold`` — session defaults for the
+                     ledger's per-site drift statistic; ``drift_overrides``
+                     maps a site name to ``{"window": ..., "threshold":
+                     ...}`` so high-rate sites can use tighter windows.
+                     One knob set, shared by the warning path
+                     (``ledger.report()``), the correction loop, and the
+                     recalibration trigger.
     """
 
     calibrate: bool = False
@@ -77,19 +96,26 @@ class RuntimeConfig:
     hardware: Optional[HardwareSpec] = None
     mesh_shape: Optional[Dict[str, int]] = None
     ledger_max_entries: int = 10_000
+    corrections: bool = False
+    auto_recalibrate: bool = False
+    drift_window: int = 20
+    drift_threshold: float = 3.0
+    drift_overrides: Optional[Mapping[str, Mapping[str, Any]]] = None
 
     @classmethod
     def from_env(cls, env: Optional[Mapping[str, str]] = None,
                  **overrides: Any) -> "RuntimeConfig":
         """The one place the legacy ``REPRO_*`` environment variables are
         read: ``REPRO_CALIBRATE=1`` -> calibrate, ``REPRO_AUTOTUNE=1`` ->
-        autotune, ``REPRO_COST_CACHE`` -> cache_dir.  Keyword overrides win
-        over the environment."""
+        autotune, ``REPRO_CORRECTIONS=1`` -> corrections,
+        ``REPRO_COST_CACHE`` -> cache_dir.  Keyword overrides win over the
+        environment."""
         env = os.environ if env is None else env
         cache = env.get("REPRO_COST_CACHE")
         fields: Dict[str, Any] = {
             "calibrate": env.get("REPRO_CALIBRATE") == "1",
             "autotune": env.get("REPRO_AUTOTUNE") == "1",
+            "corrections": env.get("REPRO_CORRECTIONS") == "1",
             "cache_dir": Path(cache) if cache else None,
         }
         fields.update(overrides)
@@ -191,13 +217,21 @@ class Runtime:
                  tuner: Optional[Autotuner] = None):
         self.config = config if config is not None else RuntimeConfig()
         if engine is None:
-            ledger = OverheadLedger(self.config.ledger_max_entries)
+            ledger = OverheadLedger(
+                self.config.ledger_max_entries,
+                drift_window=self.config.drift_window,
+                drift_threshold=self.config.drift_threshold,
+                drift_overrides=self.config.drift_overrides)
             base = self.config.hardware if self.config.hardware is not None else V5E
+            corrections = (CorrectionState()
+                           if self.config.corrections else None)
             if self.config.calibrate:
                 engine = CostEngine.calibrated(
-                    base, cache_dir=self.config.cache_dir, ledger=ledger)
+                    base, cache_dir=self.config.cache_dir, ledger=ledger,
+                    corrections=corrections)
             else:
-                engine = CostEngine(hw=base, ledger=ledger)
+                engine = CostEngine(hw=base, ledger=ledger,
+                                    corrections=corrections)
         self.engine = engine
         if tuner is None:
             tuner = Autotuner(cache_dir=self.config.cache_dir,
@@ -345,7 +379,7 @@ class Runtime:
               paged: bool = False, block_size: int = 16,
               kv_blocks: Optional[int] = None, prefix_cache="auto",
               frontend=None, stream="auto", pin: bool = False,
-              now_fn=time.perf_counter) -> ServeResult:
+              stop_event=None, now_fn=time.perf_counter) -> ServeResult:
         """Run a request ``trace`` (a list of ``repro.Request``).
 
         ``continuous`` is the slot-pooled engine scheduled by this runtime's
@@ -568,6 +602,10 @@ class Runtime:
             engine.watchdog_s = (None if watchdog_ms is None
                                  else watchdog_ms / 1e3)
             engine.injector = injector
+            # cooperative graceful shutdown (launch/serve.py's SIGINT/
+            # SIGTERM handler sets this): stop intake, drain in-flight to
+            # terminal states, still return the report
+            engine.stop_event = stop_event
 
             # --- multi-process front end + token streaming (DESIGN.md §9)
             # serve_ipc decisions (workers / coalesce) are made here, at
@@ -686,11 +724,18 @@ class Runtime:
                     report.ipc_messages = fe.ipc_messages
                     report.ipc_bytes = fe.ipc_bytes
                     report.frontend_workers = fe_cfg.workers
+                    report.frontend_respawns = fe.respawns
                     report.requests.extend(failed_intake)
             finally:
                 if fe is not None:
                     fe.close()
                 engine.stream = None  # engine stays reusable stream-free
+
+            if self.config.auto_recalibrate:
+                # drift -> action at the drain boundary: the trace's
+                # measured rows are in, the device is idle, and a healed
+                # spec is what the NEXT trace should be scheduled on
+                self.engine.maybe_recalibrate()
 
             pct = report.latency_percentiles()
             return ServeResult(

@@ -206,6 +206,7 @@ class ServeReport:
     ipc_messages: int = 0       # frontend queue messages (intake + emission)
     ipc_bytes: int = 0          # pickled payload bytes through those queues
     frontend_workers: int = 0   # intake worker processes (0 = in-process)
+    frontend_respawns: int = 0  # crashed workers auto-respawned mid-trace
 
     def state_counts(self) -> Dict[str, int]:
         """How many requests ended in each lifecycle state."""
@@ -296,6 +297,7 @@ class ServeReport:
             "ipc_messages": self.ipc_messages,
             "ipc_bytes": self.ipc_bytes,
             "frontend_workers": self.frontend_workers,
+            "frontend_respawns": self.frontend_respawns,
             **self.latency_percentiles(),
             **self.ttft_percentiles(),
             "requests": [
@@ -420,6 +422,15 @@ class ContinuousServeEngine:
         self.stream = stream
         self._stream_dead = False
         self._stream_reason = ""
+        # --- cooperative graceful shutdown (DESIGN.md §8).  Either hook
+        # stops INTAKE only: queued/unarrived requests go terminal
+        # (REJECTED reason="shutdown"), active slots decode to completion,
+        # and run() still returns its report — the drain invariant holds.
+        # ``stop_event`` takes anything with ``is_set()`` (a
+        # threading.Event set from a signal handler); ``request_stop()``
+        # is the in-process equivalent.
+        self.stop_event = None
+        self._stop_requested = False
         self.scheduler = ServeScheduler(model.cfg, cost_engine, max_len=max_len)
         # --- mesh placement: shard-vs-replicate is a CostQuery, not a flag
         if shard_params not in ("auto", "shard", "replicate"):
@@ -790,6 +801,23 @@ class ContinuousServeEngine:
 
     # ------------------------------------------------------------------
 
+    def request_stop(self) -> None:
+        """Ask a running trace to shut down gracefully: intake stops at the
+        next loop boundary (queued requests -> typed REJECTED), in-flight
+        slots decode to terminal states, run() returns its report.  Safe to
+        call from a signal handler or another thread — it only sets a
+        flag.  Sticky until ``reset_stop()``."""
+        self._stop_requested = True
+
+    def reset_stop(self) -> None:
+        """Re-arm after a graceful shutdown so the engine can serve another
+        trace (``stop_event`` holders must also clear their event)."""
+        self._stop_requested = False
+
+    def _should_stop(self) -> bool:
+        return self._stop_requested or (
+            self.stop_event is not None and self.stop_event.is_set())
+
     def run(self, requests: List[Request],
             now_fn=time.perf_counter) -> ServeReport:
         """Run a request trace to completion: every request reaches a
@@ -858,6 +886,17 @@ class ContinuousServeEngine:
 
         try:
             while pending or waiting or active:
+                if self._should_stop() and (pending or waiting):
+                    # graceful shutdown: intake stops NOW — everything not
+                    # yet holding a slot goes terminal (typed REJECTED, so
+                    # a client can tell "shed at shutdown" from a fault) —
+                    # while active slots keep decoding to completion below
+                    t_stop = now()
+                    for r in list(pending) + waiting:
+                        r.mark(RequestState.REJECTED, t_stop,
+                               reason="shutdown: intake stopped")
+                    pending.clear()
+                    waiting.clear()
                 if self._stream_dead:
                     # the frontend's emission worker died: tokens can no
                     # longer reach the client, so generating more is waste.

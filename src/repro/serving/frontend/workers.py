@@ -5,7 +5,9 @@ Process layout (one deployment)::
     parent (engine thread, pinned to its reserved physical core)
       ├── intake worker 0..N-1   validate + pre-process submissions
       │     in:  per-worker bounded Queue   (round-robin from parent)
-      │     out: shared bounded Queue       (validated payloads / errors)
+      │     out: per-worker bounded Queue   (validated payloads / errors;
+      │          per-worker so a hard-killed process can only lock-poison
+      │          queues its own respawn replaces)
       └── emission worker        coalesced token bursts -> detok streams
             in:  bounded Queue  (parent flushes at macro boundaries)
             out: result Queue   (final per-request transcript at drain)
@@ -17,14 +19,22 @@ buffers unboundedly on behalf of a slow worker.  Workers are spawned (not
 forked): the parent holds live JAX/XLA threads, and the workers only ever
 import stdlib + the topology module, so spawn keeps them light and safe.
 
-Failure semantics (composing with the PR 7 lifecycle): a dead intake
-worker turns the submissions routed to it into typed FAILED requests
-before they reach the engine; a dead emission worker raises
+Failure semantics (composing with the PR 7 lifecycle): a crashed worker
+is first auto-respawned up to ``FrontendConfig.respawn`` times under the
+same bounded retry-with-backoff harness the engine uses for device steps
+(``guarded_call``): the replacement is re-pinned from the original
+affinity plan, must pass the two-ping readiness barrier, and inherits the
+dead worker's outstanding work — intake submissions are resubmitted
+(validation is pure and idempotent), emission state is rebuilt by
+replaying the log of previously published bursts so the assembled
+transcript survives.  Only after respawn attempts exhaust does the old
+typed path fire: intake submissions become typed FAILED requests before
+they reach the engine; a dead emission worker raises
 :class:`~repro.serving.frontend.stream.StreamBroken` out of
 ``FrontendStream.publish``, which the engine converts into typed FAILED
 for every in-flight request — the drain invariant (every request reaches
 a terminal state, every slot/page returns to the pool) is preserved in
-both cases.
+every case.
 
 Token generation itself never leaves the engine process, so front-end
 output is token-identical to the in-process engine by construction; the
@@ -40,6 +50,7 @@ import queue as _queue
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.faults import guarded_call
 from repro.serving.frontend import topology as topo_mod
 from repro.serving.frontend.stream import StreamBroken, TokenStream
 
@@ -60,12 +71,16 @@ class FrontendConfig:
     ``queue_depth`` bounds every IPC queue (backpressure, not buffering).
     ``pin`` requests affinity masks from :mod:`.topology`; hosts where
     ``sched_setaffinity`` is unavailable degrade to unpinned workers.
+    ``respawn`` bounds how many times a crashed worker is automatically
+    replaced per incident (0 disables self-healing: a dead worker goes
+    straight to the typed-FAILED path).
     """
 
     workers: int = 2
     coalesce: int = 1
     pin: bool = False
     queue_depth: int = 64
+    respawn: int = 2
 
     def __post_init__(self) -> None:
         if self.workers < 1:
@@ -75,6 +90,8 @@ class FrontendConfig:
         if self.queue_depth < 1:
             raise ValueError(
                 f"queue_depth must be >= 1, got {self.queue_depth}")
+        if self.respawn < 0:
+            raise ValueError(f"respawn must be >= 0, got {self.respawn}")
 
 
 def _pickled_size(obj: Any) -> int:
@@ -244,11 +261,18 @@ class ServingFrontend:
         self.workers_pinned = 0
         self.ipc_messages = 0
         self.ipc_bytes = 0
+        self.respawns = 0
         self.ping_round_trips_s: List[float] = []
+        self._worker_cpus: List[Optional[Sequence[int]]] = []
+        self._emit_log: List[Any] = []
         self._ctx = None
         self._intake_procs: List[Any] = []
         self._intake_qs: List[Any] = []
-        self._intake_out = None
+        # one reply queue PER worker: a hard-killed process can die holding
+        # a queue's shared write lock, poisoning it for every later writer
+        # — per-worker queues keep the blast radius to the queues a respawn
+        # replaces anyway
+        self._intake_outs: List[Any] = []
         self._emit_q = None
         self._emit_out = None
         self._emit_proc = None
@@ -271,26 +295,36 @@ class ServingFrontend:
                 sorted(self.plan.engine_cpus))
             worker_cpus = [sorted(m) for m in self.plan.worker_cpus]
         self._ctx = mp.get_context("spawn")
-        self._intake_out = self._ctx.Queue(maxsize=cfg.queue_depth)
+        self._worker_cpus = worker_cpus  # kept so respawns re-pin identically
         for wid in range(cfg.workers):
-            q = self._ctx.Queue(maxsize=cfg.queue_depth)
-            p = self._ctx.Process(
-                target=_intake_main,
-                args=(wid, q, self._intake_out, worker_cpus[wid],
-                      self.max_len),
-                daemon=True, name=f"repro-intake-{wid}")
-            p.start()
+            q, out_q, p = self._spawn_intake_proc(wid)
             self._intake_qs.append(q)
+            self._intake_outs.append(out_q)
             self._intake_procs.append(p)
-        self._emit_q = self._ctx.Queue(maxsize=cfg.queue_depth)
-        self._emit_out = self._ctx.Queue(maxsize=cfg.queue_depth)
-        self._emit_proc = self._ctx.Process(
-            target=_emission_main,
-            args=(self._emit_q, self._emit_out, worker_cpus[cfg.workers]),
-            daemon=True, name="repro-emission")
-        self._emit_proc.start()
+        self._emit_q, self._emit_out, self._emit_proc = self._spawn_emit_proc()
         self._started = True
         self._ping_all()
+
+    def _spawn_intake_proc(self, wid: int) -> Tuple[Any, Any, Any]:
+        q = self._ctx.Queue(maxsize=self.config.queue_depth)
+        out_q = self._ctx.Queue(maxsize=self.config.queue_depth)
+        p = self._ctx.Process(
+            target=_intake_main,
+            args=(wid, q, out_q, self._worker_cpus[wid],
+                  self.max_len),
+            daemon=True, name=f"repro-intake-{wid}")
+        p.start()
+        return q, out_q, p
+
+    def _spawn_emit_proc(self) -> Tuple[Any, Any, Any]:
+        in_q = self._ctx.Queue(maxsize=self.config.queue_depth)
+        out_q = self._ctx.Queue(maxsize=self.config.queue_depth)
+        p = self._ctx.Process(
+            target=_emission_main,
+            args=(in_q, out_q, self._worker_cpus[self.config.workers]),
+            daemon=True, name="repro-emission")
+        p.start()
+        return in_q, out_q, p
 
     def _ping_all(self) -> None:
         """Readiness barrier + measured per-message IPC round trips (the
@@ -298,16 +332,19 @@ class ServingFrontend:
         pinged TWICE: the first round trip absorbs spawn/import startup
         (hundreds of ms) and is discarded; only the second — a steady-state
         queue round trip — is recorded."""
-        pairs = [(q, self._intake_out, self._intake_procs[wid])
-                 for wid, q in enumerate(self._intake_qs)]
+        pairs = list(zip(self._intake_qs, self._intake_outs,
+                         self._intake_procs))
         pairs.append((self._emit_q, self._emit_out, self._emit_proc))
         for in_q, out_q, proc in pairs:
-            for warm in (True, False):
-                t0 = time.perf_counter()
-                in_q.put(("ping", t0))
-                self._expect_pong(out_q, proc)
-                if not warm:
-                    self.ping_round_trips_s.append(time.perf_counter() - t0)
+            self._ping_worker(in_q, out_q, proc)
+
+    def _ping_worker(self, in_q, out_q, proc) -> None:
+        for warm in (True, False):
+            t0 = time.perf_counter()
+            in_q.put(("ping", t0))
+            self._expect_pong(out_q, proc)
+            if not warm:
+                self.ping_round_trips_s.append(time.perf_counter() - t0)
 
     def _expect_pong(self, out_q, proc) -> None:
         deadline = time.monotonic() + _RESULT_TIMEOUT_S
@@ -325,6 +362,89 @@ class ServingFrontend:
                 continue
             if msg[0] == "pong":
                 return
+            # reply queues are per-worker and fresh at spawn: anything
+            # non-pong here is a stray from a killed predecessor's drain
+
+    # -------------------------------------------------------- self-healing --
+    def _respawn_intake(self, wid: int) -> bool:
+        """Replace a crashed intake worker: fresh process on fresh queues
+        BOTH ways (the dead worker's in-queue may hold a half-read message;
+        its reply queue may be lock-poisoned if the kill landed mid-write),
+        re-pinned from the stored affinity plan, two-ping readiness barrier.
+        Bounded by ``config.respawn`` attempts under the same
+        exponential-backoff harness as device-step retries.  Returns True
+        when a live worker holds slot ``wid`` afterwards."""
+        if self.config.respawn < 1 or not self._started:
+            return False
+        old = self._intake_procs[wid]
+        if old.is_alive():
+            return True
+        old.join(timeout=_JOIN_TIMEOUT_S)
+
+        def attempt(_cancel):
+            q, out_q, p = self._spawn_intake_proc(wid)
+            try:
+                self._ping_worker(q, out_q, p)
+            except Exception:
+                if p.is_alive():
+                    p.terminate()
+                p.join(timeout=_JOIN_TIMEOUT_S)
+                raise
+            return q, out_q, p
+
+        try:
+            q, out_q, p = guarded_call(attempt,
+                                       retries=self.config.respawn - 1)
+        except Exception:
+            return False
+        for dead_q in (self._intake_qs[wid], self._intake_outs[wid]):
+            dead_q.cancel_join_thread()
+            dead_q.close()
+        self._intake_qs[wid] = q
+        self._intake_outs[wid] = out_q
+        self._intake_procs[wid] = p
+        self.respawns += 1
+        return True
+
+    def _respawn_emission(self) -> bool:
+        """Replace a crashed emission worker and replay the burst log into
+        it, rebuilding the per-request transcript state the crash destroyed.
+        Tokens were generated in the engine process, so replay reconstructs
+        exactly what the dead worker had seen — the transcript survives the
+        crash bit-for-bit.  Bounded like :meth:`_respawn_intake`."""
+        if self.config.respawn < 1 or not self._started \
+                or self._emit_proc is None:
+            return False
+        if self._emit_proc.is_alive():
+            return True
+        self._emit_proc.join(timeout=_JOIN_TIMEOUT_S)
+
+        def attempt(_cancel):
+            in_q, out_q, p = self._spawn_emit_proc()
+            try:
+                self._ping_worker(in_q, out_q, p)
+                for burst in self._emit_log:
+                    msg = ("emit", burst)
+                    in_q.put(msg, timeout=_RESULT_TIMEOUT_S)
+                    self._count_msg(msg)
+            except Exception:
+                if p.is_alive():
+                    p.terminate()
+                p.join(timeout=_JOIN_TIMEOUT_S)
+                raise
+            return in_q, out_q, p
+
+        try:
+            in_q, out_q, p = guarded_call(
+                attempt, retries=self.config.respawn - 1)
+        except Exception:
+            return False
+        for q in (self._emit_q, self._emit_out):
+            q.cancel_join_thread()
+            q.close()
+        self._emit_q, self._emit_out, self._emit_proc = in_q, out_q, p
+        self.respawns += 1
+        return True
 
     # ------------------------------------------------------------ intake --
     def submit(self, submissions: Sequence[Dict[str, Any]],
@@ -332,17 +452,24 @@ class ServingFrontend:
         """Round-robin raw submissions over the intake workers; wait for
         every verdict.  Returns ``(validated, failures)`` keyed by rid —
         ``failures`` carries typed reasons for invalid submissions and for
-        submissions routed to a worker that died (those become FAILED, not
-        a crashed serve run)."""
+        submissions routed to a worker that died with respawns exhausted
+        (those become FAILED, not a crashed serve run).  A crashed worker
+        is respawned in place when the budget allows, and its unanswered
+        submissions are resubmitted — validation is pure and idempotent,
+        so a submission the dead worker half-processed re-validates to the
+        same verdict."""
         if not self._started:
             raise FrontendError("frontend not started")
         routed: Dict[str, int] = {}
+        subs_by_rid: Dict[str, Dict[str, Any]] = {}
         for sub in submissions:
             wid = self._rr % len(self._intake_qs)
             self._rr += 1
             rid = str(sub.get("rid", "?"))
+            subs_by_rid[rid] = sub
             msg = ("req", sub)
-            if not self._intake_procs[wid].is_alive():
+            if not self._intake_procs[wid].is_alive() \
+                    and not self._respawn_intake(wid):
                 routed[rid] = -1  # dead on arrival: typed failure below
                 continue
             try:
@@ -359,30 +486,57 @@ class ServingFrontend:
         pending = {rid for rid, wid in routed.items() if wid >= 0}
         deadline = time.monotonic() + _RESULT_TIMEOUT_S
         while pending:
-            try:
-                msg = self._intake_out.get(timeout=0.5)
-            except _queue.Empty:
-                dead = [rid for rid in pending
-                        if not self._intake_procs[routed[rid]].is_alive()]
-                for rid in dead:
-                    failures[rid] = "frontend: intake worker crashed"
-                    pending.discard(rid)
-                if time.monotonic() > deadline and pending:
-                    for rid in list(pending):
-                        failures[rid] = "frontend: intake timed out"
-                        pending.discard(rid)
+            progressed = False
+            for wid in sorted({routed[rid] for rid in pending}):
+                try:
+                    msg = self._intake_outs[wid].get(timeout=0.25)
+                except _queue.Empty:
+                    continue
+                self._count_msg(msg)
+                self._dispatch_verdict(msg, validated, failures, pending)
+                progressed = True
+            if progressed:
                 continue
-            self._count_msg(msg)
-            if msg[0] == "ok":
-                _, rid, payload = msg
-                validated[str(rid)] = payload
-                pending.discard(str(rid))
-            elif msg[0] == "invalid":
-                _, rid, why = msg
-                failures[str(rid)] = why
-                pending.discard(str(rid))
-            # stray pongs from startup retries are ignored
+            dead_wids = {routed[rid] for rid in pending
+                         if not self._intake_procs[routed[rid]].is_alive()}
+            for wid in dead_wids:
+                rids = [r for r in pending if routed[r] == wid]
+                if self._respawn_intake(wid):
+                    # the crashed worker's reply queue went with it: every
+                    # unanswered rid re-validates on the fresh worker
+                    for rid in rids:
+                        msg = ("req", subs_by_rid[rid])
+                        try:
+                            self._intake_qs[wid].put(
+                                msg, timeout=_RESULT_TIMEOUT_S)
+                        except _queue.Full:
+                            failures[rid] = "frontend: intake worker crashed"
+                            pending.discard(rid)
+                            continue
+                        self._count_msg(msg)
+                    # fresh worker, fresh clock for the reissued work
+                    deadline = time.monotonic() + _RESULT_TIMEOUT_S
+                else:
+                    for rid in rids:
+                        failures[rid] = "frontend: intake worker crashed"
+                        pending.discard(rid)
+            if time.monotonic() > deadline and pending:
+                for rid in list(pending):
+                    failures[rid] = "frontend: intake timed out"
+                    pending.discard(rid)
         return validated, failures
+
+    @staticmethod
+    def _dispatch_verdict(msg, validated, failures, pending) -> None:
+        if msg[0] == "ok":
+            _, rid, payload = msg
+            validated[str(rid)] = payload
+            pending.discard(str(rid))
+        elif msg[0] == "invalid":
+            _, rid, why = msg
+            failures[str(rid)] = why
+            pending.discard(str(rid))
+        # stray pongs from startup retries are ignored
 
     # ---------------------------------------------------------- emission --
     def stream(self) -> FrontendStream:
@@ -391,7 +545,7 @@ class ServingFrontend:
     def _emit_burst(self, burst) -> None:
         if not self._started or self._emit_proc is None:
             raise StreamBroken("frontend not started")
-        if not self._emit_proc.is_alive():
+        if not self._emit_proc.is_alive() and not self._respawn_emission():
             raise StreamBroken(
                 f"emission worker died (exitcode {self._emit_proc.exitcode})")
         msg = ("emit", burst)
@@ -401,11 +555,18 @@ class ServingFrontend:
             raise StreamBroken("emission queue wedged (backpressure "
                                "timeout with worker alive)") from None
         self._count_msg(msg)
+        # replay log: the price of emission self-healing is one host-side
+        # copy of the published stream (proportional to transcript size)
+        self._emit_log.append(burst)
 
     def finish(self) -> Dict[str, Dict[str, Any]]:
         """Drain the emission worker: returns its per-request transcript
-        (tokens, detok text, event counts, first-burst times)."""
-        if self._emit_proc is None or not self._emit_proc.is_alive():
+        (tokens, detok text, event counts, first-burst times).  A worker
+        that died between the last burst and the drain is respawned and
+        fed the replay log first, so the crash is invisible here too."""
+        if self._emit_proc is None:
+            raise StreamBroken("emission worker is not running")
+        if not self._emit_proc.is_alive() and not self._respawn_emission():
             raise StreamBroken("emission worker is not running")
         self._emit_q.put(None)
         deadline = time.monotonic() + _RESULT_TIMEOUT_S
@@ -450,13 +611,15 @@ class ServingFrontend:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=_JOIN_TIMEOUT_S)
-        for q in (*self._intake_qs, self._intake_out, self._emit_q,
+        for q in (*self._intake_qs, *self._intake_outs, self._emit_q,
                   self._emit_out):
             if q is not None:
                 q.cancel_join_thread()
                 q.close()
         self._intake_procs, self._intake_qs = [], []
+        self._intake_outs = []
         self._emit_proc = None
+        self._emit_log = []
         self._started = False
 
     # --------------------------------------------------------- accounting --

@@ -437,5 +437,9 @@ class ServeScheduler:
         return int(dec.value), dec
 
     def record_measured(self, decision: Decision, seconds: float,
-                        note: str = "") -> None:
-        self.engine.record_measured(decision, seconds, note=note)
+                        note: str = ""):
+        """Attach a measured wall time to ``decision``'s ledger row.
+        Returns the LedgerEntry (the correction loop has already consumed
+        it by then — the chaos harness reads it to assert what the loop
+        saw)."""
+        return self.engine.record_measured(decision, seconds, note=note)

@@ -1,0 +1,266 @@
+"""Closed-loop cost corrections (DESIGN.md §10): unit + integration anchors.
+
+* CorrectionState guardrails: warmup, clamp AT the band edges, rollback
+  after a full regret window of harmful correction, cache invalidation
+  exactly on ``invalidate_ratio`` crossings — not before, not after
+* the engine applies the factor uniformly (argmin verdicts invariant,
+  ``Decision.correction`` ledgered, raw ratio recoverable) and drops its
+  decision cache on invalidation events
+* serve_admit — the one absolute-threshold solver — DOES flip under a
+  correction, which is the point of restoring absolute accuracy
+* drift semantics: RAW ratio trips the drift flag, the live factor
+  resolves it; per-site window/threshold overrides flow from
+  RuntimeConfig into the ledger's report and the drift statistic
+* persistence: factors ride the fingerprint-keyed calibration cache and
+  survive both a CostEngine rebuild and a full Runtime restart
+* graceful-shutdown plumbing is covered in test_serving_robust.py
+"""
+
+import math
+
+import pytest
+
+from repro.core.costs import (
+    CorrectionState,
+    CostEngine,
+    OverheadLedger,
+)
+from repro.core.costs.engine import CostQuery
+from repro.runtime import Runtime, RuntimeConfig
+
+# ---------------------------------------------------------------------------
+# CorrectionState guardrails
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_keeps_factor_at_one_until_min_measurements():
+    cs = CorrectionState(min_measurements=3)
+    for _ in range(2):
+        cs.update("sort", 2.0)
+        assert cs.factor("sort") == 1.0
+    cs.update("sort", 2.0)
+    assert cs.factor("sort") == pytest.approx(2.0)
+
+
+def test_factor_clamps_exactly_at_band_edges():
+    cs = CorrectionState(alpha=1.0, min_measurements=1, max_correction=8.0)
+    cs.update("hot", 1e6)
+    assert cs.factor("hot") == 8.0          # exactly the edge, not beyond
+    cs2 = CorrectionState(alpha=1.0, min_measurements=1, max_correction=8.0)
+    cs2.update("cold", 1e-6)
+    assert cs2.factor("cold") == 1.0 / 8.0
+
+
+def test_invalidation_fires_exactly_on_ratio_crossings():
+    cs = CorrectionState(alpha=1.0, min_measurements=1,
+                         invalidate_ratio=1.5)
+    # 1.4 < 1.5: factor moved but the cache may keep its verdicts
+    assert cs.update("s", 1.4) == []
+    # from the cache's last-seen 1.0 to 1.6: crossed -> invalidate
+    assert cs.update("s", 1.6) == ["invalidate"]
+    # 1.7 vs the newly-seen 1.6 is a 1.06x move: no event
+    assert cs.update("s", 1.7) == []
+    # and back down past the ratio (1.7 / 1.05 > 1.5): invalidate again
+    assert cs.update("s", 1.05) == ["invalidate"]
+
+
+def test_rollback_after_full_window_of_harmful_correction():
+    cs = CorrectionState(alpha=1.0, min_measurements=1, regret_window=4)
+    cs.update("s", 4.0)                      # learn x4 from one loud row
+    assert cs.factor("s") == pytest.approx(4.0)
+    events = []
+    for _ in range(5):                       # accurate rows, factor harming
+        events += cs.update("s", 1.0, applied_factor=4.0)
+        if "rollback" in events:
+            break
+    assert "rollback" in events
+    assert cs.factor("s") == 1.0             # reset and re-warming
+    assert cs.site("s").rollbacks == 1
+    assert cs.site("s").n == 0
+
+
+def test_rollback_needs_a_full_window_and_an_applied_factor():
+    cs = CorrectionState(alpha=1.0, min_measurements=1, regret_window=4)
+    # uncorrected noisy rows never roll back (nothing was applied)
+    for r in (3.0, 0.3, 3.0, 0.3, 3.0):
+        assert "rollback" not in cs.update("s", r, applied_factor=1.0)
+    assert cs.site("s").rollbacks == 0
+
+
+def test_state_roundtrips_through_dict_payload():
+    cs = CorrectionState(alpha=1.0, min_measurements=1)
+    cs.update("a", 2.0)
+    cs.update("b", 0.5)
+    cs2 = CorrectionState(min_measurements=1)  # loaded n rides along
+    cs2.load(cs.to_dict())
+    assert cs2.factor("a") == pytest.approx(cs.factor("a"))
+    assert cs2.factor("b") == pytest.approx(cs.factor("b"))
+    cs2.load(None)                           # tolerated: no-op
+    cs2.load({"bad": {"log_ewma": "nope"}})  # malformed entry skipped
+    assert cs2.factor("a") == pytest.approx(cs.factor("a"))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: uniform scaling, ledgered correction, invalidation
+# ---------------------------------------------------------------------------
+
+
+def _scan_query(seq=512):
+    return CostQuery.make("scan_chunk", (seq, 1, 4, 64))
+
+
+def test_engine_applies_factor_uniformly_and_ledgers_it():
+    plain = CostEngine()
+    eng = CostEngine(corrections=CorrectionState())
+    q = _scan_query()
+    want = plain.query(q, record=False).choice
+    for _ in range(4):                       # machine 2x slower than model
+        dec = eng.query(q)
+        # measured = 2x the RAW analytic prediction, whatever factor is live
+        eng.record_measured(dec, 2.0 * dec.predicted_s / dec.correction)
+    dec = eng.query(q)
+    assert dec.correction == pytest.approx(
+        eng.corrections.factor("scan_chunk"))
+    assert dec.correction > 1.0
+    # every candidate scaled equally: the verdict cannot move
+    assert dec.choice == want
+    raw = plain.query(q, record=False).predicted.total
+    assert dec.predicted.total == pytest.approx(raw * dec.correction)
+    # the raw analytic ratio stays recoverable off the ledger rows
+    entry = eng.ledger.entries[-1]
+    assert entry.correction == pytest.approx(dec.correction)
+
+
+def test_invalidation_drops_cached_verdicts():
+    eng = CostEngine(corrections=CorrectionState(
+        alpha=1.0, min_measurements=1, invalidate_ratio=1.5))
+    q = _scan_query()
+    d1 = eng.query(q)
+    assert eng.query(q) is d1                # memoized
+    dec = eng.query(q)
+    eng.record_measured(dec, 3.0 * dec.predicted_s)   # 3x: crosses 1.5
+    assert eng.cache_invalidations >= 1
+    d2 = eng.query(q)
+    assert d2 is not d1                      # fresh solve under the factor
+    assert d2.correction == pytest.approx(3.0)
+
+
+def test_serve_admit_flips_shed_under_correction():
+    kw = dict(prompt_len=64, new_tokens=16, n_slots=4,
+              flops_per_token=1e6, weight_bytes=1e6, kv_bytes_per_slot=1e4)
+    plain = CostEngine()
+    probe = CostQuery.make("serve_admit", (2,), **kw)
+    admit_s = plain.query(probe, record=False).baseline.total
+    # slack fits the raw prediction but NOT the corrected (2x) one
+    q = CostQuery.make("serve_admit", (2,),
+                       slack_us=admit_s * 1.5e6, **kw)
+    assert plain.query(q, record=False).choice == "admit"
+    eng = CostEngine(corrections=CorrectionState(
+        alpha=1.0, min_measurements=1))
+    eng.corrections.update("serve_admit", 2.0)
+    assert eng.query(q, record=False).choice == "shed"
+
+
+def test_measurement_noise_hook_perturbs_recorded_rows():
+    eng = CostEngine()
+    eng.measurement_noise = lambda site: 2.0
+    dec = eng.query(CostQuery.make("sort", (1000,)))
+    entry = eng.record_measured(dec, 1e-3)
+    assert entry.measured_s == pytest.approx(2e-3)
+
+
+def test_perturb_hw_swaps_spec_and_drops_cache():
+    eng = CostEngine()
+    q = _scan_query()
+    d1 = eng.query(q)
+    old = eng.hw.kernel_launch_s
+    eng.perturb_hw(kernel_launch_s=old * 4)
+    assert eng.hw.kernel_launch_s == pytest.approx(old * 4)
+    assert eng.perturbed_fields == {"kernel_launch_s": old * 4}
+    assert eng.query(q) is not d1            # cache dropped with the spec
+
+
+# ---------------------------------------------------------------------------
+# Drift semantics: raw trips, corrections resolve, overrides flow through
+# ---------------------------------------------------------------------------
+
+
+def test_raw_drift_resolved_by_correction_and_gate_behavior():
+    eng = CostEngine(corrections=CorrectionState(
+        alpha=1.0, min_measurements=1))
+    q = CostQuery.make("sort", (1000,))
+    for _ in range(8):                       # machine 5x the model, steadily
+        dec = eng.query(q)
+        eng.record_measured(dec, 5.0 * dec.predicted_s / dec.correction)
+    row = eng.drift_report()["sort"]
+    assert row["drifting"]                   # RAW ratio out of [1/3, 3]
+    assert row["raw_ratio"] == pytest.approx(5.0, rel=0.05)
+    assert row["resolved"]                   # the factor absorbs it
+    assert row["correction"] == pytest.approx(5.0, rel=0.05)
+    eng.assert_drift_resolved()              # gate passes: drift absorbed
+
+    bare = CostEngine()                      # no corrections: same drift
+    for _ in range(8):
+        dec = bare.query(q)
+        bare.record_measured(dec, 5.0 * dec.predicted_s)
+    with pytest.raises(AssertionError, match="unresolved calibration drift"):
+        bare.assert_drift_resolved()
+
+
+def test_runtime_config_drift_overrides_reach_ledger_and_report():
+    rt = Runtime(RuntimeConfig(
+        drift_window=10, drift_threshold=3.0,
+        drift_overrides={"sort": {"threshold": 1.5, "window": 5}}))
+    assert rt.ledger.drift_config("sort") == {"window": 5, "threshold": 1.5}
+    assert rt.ledger.drift_config("matmul") == {"window": 10,
+                                                "threshold": 3.0}
+    for kind, shape in (("sort", (1000,)), ("scan_chunk", (512, 1, 4, 64))):
+        for _ in range(6):                   # 2x: over 1.5, under 3.0
+            dec = rt.engine.query(CostQuery.make(kind, shape))
+            rt.engine.record_measured(dec, 2.0 * dec.predicted_s)
+    drift = rt.engine.drift_report()
+    assert drift["sort"]["drifting"]         # tight per-site band trips
+    assert drift["sort"]["threshold"] == 1.5
+    assert not drift["scan_chunk"]["drifting"]   # session default holds
+    report = rt.ledger.report()
+    assert "sort" in report and "calibration drift" in report
+
+
+# ---------------------------------------------------------------------------
+# Persistence: factors ride the fingerprint-keyed calibration cache
+# ---------------------------------------------------------------------------
+
+
+def _seed_scan_factor(eng, ratio=2.0, rows=4):
+    for _ in range(rows):
+        dec = eng.query(_scan_query())
+        eng.record_measured(dec, ratio * dec.predicted_s / dec.correction)
+    return eng.corrections.factor("scan_chunk")
+
+
+def test_corrections_persist_across_engine_rebuild(tmp_path):
+    eng = CostEngine.calibrated(cache_dir=tmp_path, matmul_order=128,
+                                corrections=CorrectionState())
+    learned = _seed_scan_factor(eng)
+    assert learned > 1.0
+    assert eng.save_state() is not None
+    eng2 = CostEngine.calibrated(cache_dir=tmp_path, matmul_order=128,
+                                 corrections=CorrectionState())
+    assert eng2.corrections.factor("scan_chunk") == pytest.approx(learned)
+    assert eng2.hw == eng.hw                 # same fingerprint-keyed spec
+
+
+def test_corrections_survive_runtime_restart(tmp_path):
+    cfg = RuntimeConfig(calibrate=True, corrections=True, cache_dir=tmp_path)
+    rt = Runtime(cfg)
+    learned = _seed_scan_factor(rt.engine)
+    assert learned > 1.0
+    rt.engine.save_state()
+    rt2 = Runtime(cfg)                       # fresh session, same cache
+    assert rt2.engine.corrections.factor("scan_chunk") == \
+        pytest.approx(learned)
+
+
+def test_uncalibrated_save_state_is_a_noop():
+    eng = CostEngine(corrections=CorrectionState())
+    assert eng.save_state() is None

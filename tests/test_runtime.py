@@ -52,6 +52,7 @@ DOCUMENTED_API = [
     "FrontendConfig",
     "TokenStream",
     "HostTopology",
+    "CorrectionState",
     "CostEngine",
     "CostQuery",
     "Decision",

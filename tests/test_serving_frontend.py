@@ -213,9 +213,13 @@ def test_frontend_serve_token_identical_dense_and_paged():
 
 
 def test_dead_emission_worker_fails_typed_and_engine_stays_usable():
+    # respawn=0 opts out of self-healing: a dead worker goes straight to
+    # the typed-FAILED path (the pre-self-healing contract, still the
+    # fallback once the respawn budget exhausts)
     cfg, model, params = _build()
     prompts = _prompts(cfg, 3)
-    fe = ServingFrontend(FrontendConfig(workers=1), max_len=MAX_LEN)
+    fe = ServingFrontend(FrontendConfig(workers=1, respawn=0),
+                         max_len=MAX_LEN)
     fe.start()
     try:
         engine = ContinuousServeEngine(model, params, n_slots=2,
@@ -239,7 +243,9 @@ def test_dead_emission_worker_fails_typed_and_engine_stays_usable():
 
 
 def test_dead_intake_workers_yield_typed_failures():
-    fe = ServingFrontend(FrontendConfig(workers=1), max_len=MAX_LEN)
+    # respawn=0: no healing, routed submissions become typed failures
+    fe = ServingFrontend(FrontendConfig(workers=1, respawn=0),
+                         max_len=MAX_LEN)
     fe.start()
     try:
         fe.kill_intake_workers()
@@ -352,3 +358,64 @@ def test_idle_sleeps_to_next_arrival_not_fixed_polls(monkeypatch):
     # fixed 50 ms poll would have woken ~6 times instead
     assert max(sleeps) >= 0.5 * gap
     assert len(sleeps) <= 6
+
+
+# ---------------------------------------------------------------------------
+# Self-healing: bounded auto-respawn of crashed workers
+# ---------------------------------------------------------------------------
+
+
+def test_crashed_intake_workers_respawn_and_submissions_validate():
+    fe = ServingFrontend(FrontendConfig(workers=2, respawn=2),
+                         max_len=MAX_LEN)
+    fe.start()
+    try:
+        subs = [{"rid": f"r{i}", "prompt": [1, 2, 3], "max_new_tokens": 2}
+                for i in range(4)]
+        validated, failures = fe.submit(subs)
+        assert set(validated) == {f"r{i}" for i in range(4)} and not failures
+        fe.kill_intake_workers()
+        validated, failures = fe.submit(subs)
+        assert set(validated) == {f"r{i}" for i in range(4)} and not failures
+        assert fe.respawns >= 1
+        # the replacements are real processes holding the crashed slots
+        assert all(p.is_alive() for p in fe._intake_procs)
+    finally:
+        fe.close()
+
+
+def test_crashed_emission_worker_respawns_with_replayed_transcript():
+    fe = ServingFrontend(FrontendConfig(workers=1, respawn=2),
+                         max_len=MAX_LEN)
+    fe.start()
+    try:
+        stream = fe.stream()
+        stream.publish("a", (1, 2), done=False, t=0.0)
+        stream.publish("b", (7,), done=False, t=0.0)
+        fe.kill_emission_worker()
+        # next burst hits the dead worker: respawn + replay, no data loss
+        stream.publish("a", (3,), done=True, t=0.1)
+        stream.publish("b", (8,), done=True, t=0.1)
+        transcript = fe.finish()
+        assert fe.respawns == 1
+        assert transcript["a"]["tokens"] == [1, 2, 3]
+        assert transcript["b"]["tokens"] == [7, 8]
+        assert transcript["a"]["text"] == "1 2 3"
+    finally:
+        fe.close()
+
+
+def test_emission_respawn_survives_crash_before_finish():
+    fe = ServingFrontend(FrontendConfig(workers=1, respawn=1),
+                         max_len=MAX_LEN)
+    fe.start()
+    try:
+        stream = fe.stream()
+        stream.publish("a", (4, 5), done=True, t=0.0)
+        # crash AFTER the last burst: finish() itself must heal + replay
+        fe.kill_emission_worker()
+        transcript = fe.finish()
+        assert fe.respawns == 1
+        assert transcript["a"]["tokens"] == [4, 5]
+    finally:
+        fe.close()
